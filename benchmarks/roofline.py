@@ -1,0 +1,123 @@
+"""Roofline analysis from the dry-run artifacts (single-pod mesh).
+
+Per (arch x shape): three terms in seconds (v5e constants), dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS useful-compute ratio, one-line
+bottleneck note.  Reads benchmarks/artifacts/*.json + *.hlo.gz; writes a
+markdown table (stdout or EXPERIMENTS.md include) and a CSV.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM,
+50 GB/s/link ICI.  All analyzer numbers are per-device (post-SPMD HLO),
+so terms are per-device seconds per step.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+import hlo_analysis  # noqa: E402
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+SHAPE_TOKENS = {
+    "train_4k": ("train", 4096 * 256),
+    "prefill_32k": ("prefill", 32768 * 32),
+    "decode_32k": ("decode", 128),
+    "long_500k": ("decode", 1),
+}
+
+
+def model_flops(rec: dict) -> float:
+    """Analytic 6·N·D (train) / 2·N·D (serve) per device."""
+    kind, tokens = SHAPE_TOKENS[rec["shape"]]
+    n = rec["active_params"]
+    mult = 6 if kind == "train" else 2
+    return mult * n * tokens / rec["devices"]
+
+
+def analyze_cell(json_path: str, *, use_cache: bool = True) -> dict:
+    with open(json_path) as f:
+        rec = json.load(f)
+    if rec["status"] != "ok":
+        return rec
+    hlo_path = json_path.replace(".json", ".hlo.gz")
+    cache_path = json_path.replace(".json", ".roofline.json")
+    if use_cache and os.path.exists(cache_path) and \
+            os.path.getmtime(cache_path) > max(os.path.getmtime(hlo_path),
+                                               os.path.getmtime(hlo_analysis.__file__)):
+        with open(cache_path) as f:
+            return json.load(f)
+    h = hlo_analysis.analyze_file(hlo_path)
+    out = dict(rec)
+    out.pop("memory_analysis", None)
+    out.pop("cost_analysis", None)
+    out["hlo_flops"] = h["flops"]
+    out["hlo_hbm_bytes"] = h["hbm_bytes"]
+    out["hlo_collectives"] = h["collectives"]
+    out["wire_bytes"] = h["wire_bytes"]
+    out["t_compute"] = h["flops"] / PEAK_FLOPS
+    out["t_memory"] = h["hbm_bytes"] / HBM_BW
+    out["t_collective"] = h["wire_bytes"] / ICI_BW
+    out["model_flops"] = model_flops(rec)
+    out["useful_ratio"] = out["model_flops"] / max(h["flops"], 1.0)
+    terms = {"compute": out["t_compute"], "memory": out["t_memory"],
+             "collective": out["t_collective"]}
+    out["bottleneck"] = max(terms, key=terms.get)
+    # roofline fraction: useful compute time / modeled step time
+    t_star = out["model_flops"] / PEAK_FLOPS
+    t_step = max(terms.values())
+    out["roofline_fraction"] = t_star / t_step if t_step else 0.0
+    with open(cache_path, "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def table(artifact_dir: str = None, mesh: str = "single"):
+    artifact_dir = artifact_dir or os.path.join(os.path.dirname(__file__), "artifacts")
+    rows = []
+    for path in sorted(glob.glob(os.path.join(artifact_dir, f"*__{mesh}.json"))):
+        rec = analyze_cell(path)
+        rows.append(rec)
+    return rows
+
+
+def fmt_table(rows) -> str:
+    hdr = ("| arch | shape | t_compute s | t_memory s | t_coll s | bottleneck "
+           "| MODEL/HLO flops | roofline frac |\n|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.3g} | "
+            f"{r['t_memory']:.3g} | {r['t_collective']:.3g} | {r['bottleneck']} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} |")
+    return hdr + "\n".join(lines)
+
+
+def main():
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    rows = table(mesh=mesh)
+    print(fmt_table(rows))
+    csv_path = os.path.join(os.path.dirname(__file__), f"roofline_{mesh}.csv")
+    with open(csv_path, "w") as f:
+        f.write("arch,shape,status,t_compute,t_memory,t_collective,bottleneck,"
+                "useful_ratio,roofline_fraction,hlo_flops,model_flops,wire_bytes\n")
+        for r in rows:
+            if r["status"] != "ok":
+                f.write(f"{r['arch']},{r['shape']},{r['status']},,,,,,,,,\n")
+                continue
+            f.write(f"{r['arch']},{r['shape']},ok,{r['t_compute']:.6g},"
+                    f"{r['t_memory']:.6g},{r['t_collective']:.6g},{r['bottleneck']},"
+                    f"{r['useful_ratio']:.4f},{r['roofline_fraction']:.4f},"
+                    f"{r['hlo_flops']:.6g},{r['model_flops']:.6g},{r['wire_bytes']:.6g}\n")
+    print(f"\nwrote {csv_path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

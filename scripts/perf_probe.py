@@ -1,0 +1,66 @@
+"""§Perf probe: dry-run one cell with config overrides (hypothesis testing
+without touching the committed configs).
+
+  PYTHONPATH=src python scripts/perf_probe.py llama3.2-1b train_4k remat=none
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import dataclasses
+import sys
+
+sys.path.insert(0, "benchmarks")
+
+import jax  # noqa: E402
+
+import hlo_analysis  # noqa: E402
+from repro.configs import registry  # noqa: E402
+from repro.configs.shapes import SHAPES, input_specs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.registry import build  # noqa: E402
+from repro.optim.adamw import AdamW  # noqa: E402
+from repro.train import steps as tsteps  # noqa: E402
+
+
+def probe(arch, shape_name, **overrides):
+    cfg = dataclasses.replace(registry.get_config(arch), **overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh()
+    model = build(cfg)
+    with mesh:
+        if shape.kind == "train":
+            opt = AdamW(moment_dtype="bfloat16" if cfg.param_dtype == "bfloat16" else None)
+            step = tsteps.bind_mesh(tsteps.make_train_step(model, opt), mesh)
+            spec = input_specs(cfg, shape)
+            (in_sh, b_sh), (out_sh, _), state_abs = tsteps.train_shardings(
+                model, opt, mesh, spec)
+            lowered = jax.jit(step, in_shardings=(in_sh, b_sh),
+                              out_shardings=(out_sh, None),
+                              donate_argnums=(0,)).lower(state_abs, spec)
+        elif shape.kind == "prefill":
+            step = tsteps.bind_mesh(tsteps.make_prefill_step(model, shape.seq), mesh)
+            spec = input_specs(cfg, shape)
+            shards, params_abs = tsteps.serve_shardings(
+                model, mesh, jax.eval_shape(
+                    lambda: model.init_cache(shape.batch, shape.seq)),
+                batch_like=spec)
+            lowered = jax.jit(step, in_shardings=(shards["params"], shards["batch"]),
+                              out_shardings=(None, shards["cache"])).lower(params_abs, spec)
+        else:
+            raise SystemExit("probe supports train/prefill")
+        compiled = lowered.compile()
+    r = hlo_analysis.analyze(compiled.as_text())
+    print(f"{arch} {shape_name} {overrides}: "
+          f"t=({r['flops'] / 197e12:.3f},{r['hbm_bytes'] / 819e9:.3f},"
+          f"{r['wire_bytes'] / 50e9:.3f})s flops={r['flops']:.3e}")
+    return r
+
+
+if __name__ == "__main__":
+    arch, shape = sys.argv[1], sys.argv[2]
+    ov = {}
+    for kv in sys.argv[3:]:
+        k, v = kv.split("=")
+        ov[k] = v if not v.replace(".", "").lstrip("-").isdigit() else (
+            int(v) if "." not in v else float(v))
+    probe(arch, shape, **ov)

@@ -1,0 +1,101 @@
+"""Assigned input-shape cells and their ShapeDtypeStruct input specs.
+
+LM shapes are seq_len x global_batch; decode_* / long_* lower ``serve_step``
+(one token against a seq_len cache), not ``train_step``.  ``long_500k``
+requires sub-quadratic attention: it runs for the SSM/hybrid archs and is
+SKIPPED for pure full-attention archs (recorded per cell; see DESIGN.md
+§Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.registry import build
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", "train", 4096, 256),
+    "prefill_32k": Shape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": Shape("decode_32k", "decode", 32768, 128),
+    "long_500k": Shape("long_500k", "decode", 524288, 1),
+}
+
+WHISPER_ENC_LEN = 1500      # cross-attention length for whisper decode cells
+
+
+def applicable(cfg: ModelConfig, shape: Shape) -> tuple[bool, str]:
+    """Whether this (arch, shape) cell runs; else the documented skip reason."""
+    if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return False, ("pure full-attention arch: 524k-token decode requires "
+                       "sub-quadratic attention (skip per assignment)")
+    return True, ""
+
+
+def scale_shape(shape: Shape, *, seq: int = 0, batch: int = 0) -> Shape:
+    """Reduced variant for smoke tests."""
+    return Shape(shape.name, shape.kind, seq or shape.seq, batch or shape.batch)
+
+
+def input_specs(cfg: ModelConfig, shape: Shape):
+    """ShapeDtypeStruct stand-ins for every input of the step function.
+
+    train  -> batch dict for loss/train_step
+    prefill-> batch dict (+ max_len convention: cache sized to shape.seq)
+    decode -> (cache pytree, tokens)
+    """
+    B, S = shape.batch, shape.seq
+    i32 = jnp.int32
+    if cfg.family == "encdec":
+        d = cfg.d_model
+        if shape.kind == "train":
+            return {"frames": jax.ShapeDtypeStruct((B, S, d), cfg.cdt),
+                    "dec_tokens": jax.ShapeDtypeStruct((B, max(2, S // 8)), i32)}
+        if shape.kind == "prefill":
+            return {"frames": jax.ShapeDtypeStruct((B, S, d), cfg.cdt),
+                    "dec_tokens": jax.ShapeDtypeStruct((B, 8), i32)}
+        model = build(cfg)
+        cache = jax.eval_shape(
+            lambda: model.init_cache(B, S, enc_len=WHISPER_ENC_LEN))
+        tokens = jax.ShapeDtypeStruct((B, 1), i32)
+        return cache, tokens
+
+    if shape.kind == "train":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.pos == "mrope":
+            batch["positions"] = jax.ShapeDtypeStruct((3, B, S), i32)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.pos == "mrope":
+            batch["positions"] = jax.ShapeDtypeStruct((3, B, S), i32)
+        return batch
+    model = build(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    tokens = jax.ShapeDtypeStruct((B, 1), i32)
+    return cache, tokens
+
+
+def concrete_inputs(cfg: ModelConfig, shape: Shape, key=None):
+    """Small concrete batch for smoke tests (reduced shapes only)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    spec = input_specs(cfg, shape)
+
+    def mk(s):
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            return jnp.zeros(s.shape, s.dtype) + (jnp.arange(s.shape[-1], dtype=s.dtype) %
+                                                  max(2, cfg.vocab - 1) if s.shape else 0)
+        return jnp.ones(s.shape, s.dtype) * 0.01
+
+    return jax.tree.map(mk, spec)

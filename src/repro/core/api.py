@@ -1,0 +1,389 @@
+"""NVCache POSIX-like facade (paper §II-A, §III, Table III).
+
+``NVCache`` is the interception boundary: components open files and call
+``read/write/pread/pwrite/lseek/stat/fsync/close`` exactly as they would
+against libc, and transparently get
+
+  * synchronous durability — ``write`` returns only once the data is
+    committed in the NVMM log (paper Alg. 1),
+  * durable linearizability — a write is visible to a reader only when it
+    is durable (the psync before the per-page lock release),
+  * asynchronous propagation to the slow tier via the cleanup thread,
+  * ``fsync`` as a no-op (Table III: writes are already durable),
+  * user-space file size/cursor (the kernel's may be stale, §II-C).
+
+One instance == one NVMM region (one "DAX file"); several instances can
+coexist on separate regions (paper §III Multi-application).
+"""
+from __future__ import annotations
+
+import os
+import threading
+from typing import Dict, Optional
+
+from repro.core.cleanup import CleanupThread
+from repro.core.log import NVLog
+from repro.core.nvmm import NVMM
+from repro.core.policy import Policy
+from repro.core.readcache import AtomicInt, LRUCache, RadixTree
+from repro.core import recovery as _recovery
+
+O_RDONLY, O_WRONLY, O_RDWR = os.O_RDONLY, os.O_WRONLY, os.O_RDWR
+O_CREAT, O_APPEND, O_TRUNC = os.O_CREAT, os.O_APPEND, os.O_TRUNC
+_ACCMODE = os.O_ACCMODE
+
+
+class File:
+    """Per-(device,inode) state (paper §III "Open": the file table)."""
+
+    __slots__ = ("path", "fdid", "backend", "radix", "size", "size_lock",
+                 "refs", "pending", "_drained")
+
+    def __init__(self, path: str, fdid: int, backend):
+        self.path = path
+        self.fdid = fdid
+        self.backend = backend
+        self.radix: Optional[RadixTree] = None   # created on first write-open
+        self.size = backend.size()
+        self.size_lock = threading.Lock()
+        self.refs = 0
+        self.pending = AtomicInt(0)              # log entries not yet drained
+        self._drained = threading.Condition()
+
+    def note_drained(self, n: int) -> None:      # called by the cleanup thread
+        self.pending.dec(n)
+        with self._drained:
+            self._drained.notify_all()
+
+    def wait_drained(self, timeout: Optional[float] = None) -> bool:
+        with self._drained:
+            return self._drained.wait_for(lambda: self.pending.get() <= 0,
+                                          timeout=timeout)
+
+
+class OpenFile:
+    """Per-descriptor state (paper §III: the opened table / cursor)."""
+
+    __slots__ = ("file", "flags", "cursor", "cursor_lock")
+
+    def __init__(self, file: File, flags: int):
+        self.file = file
+        self.flags = flags
+        self.cursor = 0
+        self.cursor_lock = threading.Lock()
+
+
+class NVCache:
+    def __init__(self, policy: Policy, tier, *, nvmm: Optional[NVMM] = None,
+                 track_crashes: bool = False, recover: bool = True):
+        self.policy = policy
+        self.tier = tier
+        self.nvmm = nvmm or NVMM(policy.nvmm_bytes, track=track_crashes)
+        if recover and nvmm is not None:
+            try:
+                self.recovery_stats = _recovery.recover(self.nvmm, policy, tier.open)
+            except ValueError:
+                self.recovery_stats = None     # fresh region
+                NVLog(self.nvmm, policy, format=True)
+            self.log = NVLog(self.nvmm, policy, format=False)
+        else:
+            self.recovery_stats = None
+            self.log = NVLog(self.nvmm, policy, format=True)
+
+        self.lru = LRUCache(policy.read_cache_pages, policy.page_size)
+        self._files: Dict[str, File] = {}
+        self._by_fdid: Dict[int, File] = {}
+        self._open: Dict[int, OpenFile] = {}
+        self._next_fd = 3
+        self._meta = threading.Lock()
+        self._fdid_free = list(range(policy.fd_max - 1, -1, -1))
+        self.cleanup = CleanupThread(self.log, self._resolve_fdid)
+        self.cleanup.start()
+        self._crashed = False
+        self.stats_dirty_misses = 0
+
+    # ------------------------------------------------------------- lifecycle
+    def _resolve_fdid(self, fdid: int) -> Optional[File]:
+        return self._by_fdid.get(fdid)
+
+    def check(self) -> None:
+        if self.cleanup.error is not None:
+            raise RuntimeError("cleanup thread died") from self.cleanup.error
+        if self._crashed:
+            raise RuntimeError("instance crashed")
+
+    def shutdown(self) -> None:
+        """Graceful: drain the log, stop the cleanup thread."""
+        self.cleanup.shutdown()
+        self.check()
+
+    def crash(self, choose_evicted=None) -> NVMM:
+        """Simulated power loss; returns the NVMM region for recovery."""
+        self._crashed = True
+        self.cleanup.power_loss()
+        if self.nvmm.track:
+            self.nvmm.crash(choose_evicted)
+        return self.nvmm
+
+    def flush(self, timeout: Optional[float] = 60.0) -> None:
+        """Drain the whole log to the slow tier (used as a barrier)."""
+        self.cleanup.request_drain()
+        try:
+            for f in list(self._files.values()):
+                if not f.wait_drained(timeout=timeout):
+                    raise TimeoutError(f"drain of {f.path} timed out")
+        finally:
+            self.cleanup.end_drain()
+        self.check()
+
+    # ------------------------------------------------------------------ open
+    def open(self, path: str, flags: int = O_RDWR | O_CREAT) -> int:
+        self.check()
+        accmode = flags & _ACCMODE
+        with self._meta:
+            f = self._files.get(path)
+            if f is None:
+                backend = self.tier.open(path)
+                if not self._fdid_free:
+                    raise OSError("fd table full")
+                fdid = self._fdid_free.pop()
+                self.log.fd_table_set(fdid, path)   # durable path for recovery
+                f = File(path, fdid, backend)
+                self._files[path] = f
+                self._by_fdid[fdid] = f
+            if accmode != O_RDONLY and f.radix is None:
+                f.radix = RadixTree()               # read cache only for writers
+            f.refs += 1
+            fd = self._next_fd
+            self._next_fd += 1
+            of = OpenFile(f, flags)
+            self._open[fd] = of
+        if flags & O_TRUNC and accmode != O_RDONLY:
+            with f.size_lock:
+                f.size = 0
+            f.backend.truncate(0)
+        return fd
+
+    def close(self, fd: int) -> None:
+        """Flush this file's pending writes to the kernel, then close
+        (paper §I: coherence across processes via flush-on-close)."""
+        of = self._pop_fd(fd)
+        f = of.file
+        self.cleanup.request_drain()
+        try:
+            if not f.wait_drained(timeout=60.0):
+                raise TimeoutError(f"drain of {f.path} timed out on close")
+        finally:
+            self.cleanup.end_drain()
+        with self._meta:
+            f.refs -= 1
+            if f.refs == 0:
+                self._files.pop(f.path, None)
+                self._by_fdid.pop(f.fdid, None)
+                self.log.fd_table_set(f.fdid, "")   # retire the NVMM slot
+                self._fdid_free.append(f.fdid)
+                f.backend.close()
+        self.check()
+
+    def _pop_fd(self, fd: int) -> OpenFile:
+        with self._meta:
+            of = self._open.pop(fd, None)
+        if of is None:
+            raise OSError(f"bad fd {fd}")
+        return of
+
+    def _of(self, fd: int) -> OpenFile:
+        of = self._open.get(fd)
+        if of is None:
+            raise OSError(f"bad fd {fd}")
+        return of
+
+    # ----------------------------------------------------------------- write
+    def pwrite(self, fd: int, data: bytes, off: int) -> int:
+        of = self._of(fd)
+        if of.flags & _ACCMODE == O_RDONLY:
+            raise OSError("fd is read-only")
+        f = of.file
+        if not data:
+            return 0
+        max_op = (self.policy.log_entries - 1) * self.policy.entry_data
+        written = 0
+        view = memoryview(data)
+        while written < len(data):
+            chunk = view[written:written + max_op]
+            self._pwrite_op(f, bytes(chunk), off + written)
+            written += len(chunk)
+        return len(data)
+
+    def _pwrite_op(self, f: File, data: bytes, off: int) -> None:
+        """One atomic write op == one committed entry group (Alg. 1)."""
+        ps = self.policy.page_size
+        ed = self.policy.entry_data
+        n = len(data)
+        p0, p1 = off // ps, (off + max(n, 1) - 1) // ps
+        descs = [f.radix.get_or_create(p) for p in range(p0, p1 + 1)]
+        for d in descs:                       # ascending page order: no deadlock
+            d.atomic_lock.acquire()
+        try:
+            head, k = self.log.append(f.fdid, off, data)   # durable on return
+            f.pending.inc(k)
+            # dirty counters: one tick per (entry, page) overlap — must match
+            # the cleanup thread's per-entry decrements
+            for j in range(k):
+                e_off = off + j * ed
+                e_len = min(ed, n - j * ed)
+                for p in range(e_off // ps, (e_off + max(e_len, 1) - 1) // ps + 1):
+                    descs[p - p0].dirty.inc()
+            # update loaded pages so reads stay fresh (Alg. 1 lines 29-31)
+            for d in descs:
+                if d.content is not None:
+                    pstart = d.page_no * ps
+                    s = max(off, pstart)
+                    e = min(off + n, pstart + ps)
+                    if s < e:
+                        d.content.data[s - pstart:e - pstart] = data[s - off:e - off]
+                d.accessed = True
+            with f.size_lock:
+                if off + n > f.size:
+                    f.size = off + n
+        finally:
+            for d in reversed(descs):
+                d.atomic_lock.release()
+
+    def write(self, fd: int, data: bytes) -> int:
+        of = self._of(fd)
+        f = of.file
+        with of.cursor_lock:
+            if of.flags & O_APPEND:
+                with f.size_lock:
+                    off = f.size
+                    f.size = off + len(data)
+            else:
+                off = of.cursor
+            n = self.pwrite(fd, data, off)
+            of.cursor = off + n
+            return n
+
+    # ------------------------------------------------------------------ read
+    def pread(self, fd: int, n: int, off: int) -> bytes:
+        of = self._of(fd)
+        f = of.file
+        with f.size_lock:
+            size = f.size
+        if off >= size:
+            return b""
+        n = min(n, size - off)
+        if f.radix is None:
+            # read-only file: bypass the read cache entirely (§II-A) — the
+            # kernel page cache is fresh because nothing is in flight.
+            out = f.backend.pread(n, off)
+            return out + b"\x00" * (n - len(out))
+        return self._pread_cached(f, n, off)
+
+    def _pread_cached(self, f: File, n: int, off: int) -> bytes:
+        ps = self.policy.page_size
+        out = bytearray(n)
+        pos = off
+        while pos < off + n:
+            p = pos // ps
+            d = f.radix.get_or_create(p)
+            with d.atomic_lock:
+                if d.content is None:
+                    self._load_page(f, d)     # miss path
+                else:
+                    self.lru.stats_hits += 1
+                d.accessed = True
+                pstart = p * ps
+                s = pos - pstart
+                e = min(off + n - pstart, ps)
+                out[pos - off:pstart + e - off] = d.content.data[s:e]
+                pos = pstart + e
+        return bytes(out)
+
+    def _load_page(self, f: File, d) -> None:
+        """Cache-miss path (Fig. 2): evict, pread, dirty-miss replay."""
+        ps = self.policy.page_size
+        self.lru.stats_misses += 1
+        content = self.lru.acquire_buffer()
+        with d.cleanup_lock:                  # block cleanup for this page
+            base = d.page_no * ps
+            raw = f.backend.pread(ps, base)
+            content.data[:len(raw)] = raw
+            if len(raw) < ps:
+                content.data[len(raw):] = bytes(ps - len(raw))
+            if d.dirty.get() > 0:
+                # dirty miss: replay committed log entries touching the page
+                # in log order (idempotent, so entries already propagated but
+                # not yet retired apply harmlessly).
+                self.stats_dirty_misses += 1
+                tail, head = self.log.snapshot_bounds()
+                for e in self.log.scan_committed(tail, head):
+                    if e.fdid != f.fdid:
+                        continue
+                    s = max(e.off, base)
+                    t = min(e.off + e.length, base + ps)
+                    if s < t:
+                        content.data[s - base:t - base] = e.data[s - e.off:t - e.off]
+            self.lru.attach(d, content)
+
+    def read(self, fd: int, n: int) -> bytes:
+        of = self._of(fd)
+        with of.cursor_lock:
+            out = self.pread(fd, n, of.cursor)
+            of.cursor += len(out)
+            return out
+
+    # ----------------------------------------------------- metadata (§II-C)
+    def fsync(self, fd: int) -> None:
+        """No-op: writes are already synchronously durable (Table III)."""
+        self._of(fd)
+
+    def flock(self, fd: int, unlock: bool = False) -> None:
+        """Advisory lock hook (paper §I): releasing a lock flushes this
+        file's pending writes to the kernel so other processes see them."""
+        of = self._of(fd)
+        if unlock:
+            self.cleanup.request_drain()
+            try:
+                if not of.file.wait_drained(timeout=60.0):
+                    raise TimeoutError(f"flock drain of {of.file.path} timed out")
+            finally:
+                self.cleanup.end_drain()
+
+    def lseek(self, fd: int, off: int, whence: int = os.SEEK_SET) -> int:
+        of = self._of(fd)
+        with of.cursor_lock:
+            if whence == os.SEEK_SET:
+                of.cursor = off
+            elif whence == os.SEEK_CUR:
+                of.cursor += off
+            elif whence == os.SEEK_END:
+                with of.file.size_lock:
+                    of.cursor = of.file.size + off
+            else:
+                raise OSError("bad whence")
+            return of.cursor
+
+    def stat_size(self, fd_or_path) -> int:
+        if isinstance(fd_or_path, int):
+            f = self._of(fd_or_path).file
+        else:
+            f = self._files.get(fd_or_path)
+            if f is None:
+                return self.tier.open(fd_or_path).size()
+        with f.size_lock:
+            return f.size
+
+    # ------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        return {
+            "log_used": self.log.used_entries,
+            "dirty_misses": self.stats_dirty_misses,
+            "lru_hits": self.lru.stats_hits,
+            "lru_misses": self.lru.stats_misses,
+            "lru_evictions": self.lru.stats_evictions,
+            "cleanup_batches": self.cleanup.stats_batches,
+            "cleanup_entries": self.cleanup.stats_entries,
+            "cleanup_fsyncs": self.cleanup.stats_fsyncs,
+            "nvmm_psyncs": self.nvmm.stats_psync,
+        }

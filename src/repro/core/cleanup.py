@@ -1,0 +1,113 @@
+"""The cleanup thread (paper §II-A step 6, §III "Cleanup thread and batching").
+
+Consumes committed entries in log order from the persistent tail and
+propagates them to the slow tier through ordinary ``pwrite`` calls (the
+writes land in the kernel page cache, which write-combines them — the
+paper's "volatile write cache behind a durable write cache"), then one
+``fsync`` per touched file per batch, then durably retires the batch
+(zero commit flags, advance persistent tail, pwb/pfence, advance volatile
+tail).
+
+Batching (paper §IV-C): waits for at least ``batch_min`` committed entries
+unless a drain is requested (close/flush/log-full backpressure), consumes at
+most ``batch_max``.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Optional
+
+from repro.core.log import NVLog
+
+
+class CleanupThread(threading.Thread):
+    def __init__(self, log: NVLog, resolve_file: Callable[[int], Optional[object]],
+                 *, name: str = "nvcache-cleanup"):
+        super().__init__(name=name, daemon=True)
+        self.log = log
+        self.resolve_file = resolve_file      # fdid -> File (api.File) or None
+        self.drain_event = threading.Event()  # ignore batch_min
+        self.stop_event = threading.Event()   # finish current batch, then exit
+        self.hard_stop = threading.Event()    # simulated power loss: exit NOW
+        self.error: Optional[BaseException] = None
+        self.stats_batches = 0
+        self.stats_entries = 0
+        self.stats_fsyncs = 0
+
+    def run(self) -> None:
+        try:
+            while not self.hard_stop.is_set():
+                min_needed = 1 if self.drain_event.is_set() else self.log.policy.batch_min
+                run = self.log.wait_committed(min_needed,
+                                              drain_event=self.drain_event,
+                                              stop_event=self.stop_event)
+                if run == 0:
+                    if self.stop_event.is_set() or self.hard_stop.is_set():
+                        return
+                    continue
+                self._consume_batch(run)
+        except BaseException as exc:  # surfaces in api.check()
+            self.error = exc
+
+    # ------------------------------------------------------------------
+    def _consume_batch(self, run: int) -> None:
+        log = self.log
+        ps = log.policy.page_size
+        start = log.persistent_tail
+        touched = {}          # File -> n_entries drained for it
+        for e in log.scan_committed(start, start + run):
+            if self.hard_stop.is_set():
+                return        # power loss mid-batch: nothing retired, log replays
+            f = self.resolve_file(e.fdid)
+            if f is None:     # orphan (file force-closed); drop the entry
+                continue
+            p0, p1 = e.off // ps, (e.off + max(e.length, 1) - 1) // ps
+            descs = []
+            if f.radix is not None:
+                for p in range(p0, p1 + 1):
+                    d = f.radix.get_or_create(p)
+                    d.cleanup_lock.acquire()   # block dirty-miss readers (§II-D)
+                    descs.append(d)
+            try:
+                f.backend.pwrite(bytes(e.data), e.off)
+                for d in descs:
+                    d.dirty.dec()              # may transiently go negative (fn. 4)
+            finally:
+                for d in descs:
+                    d.cleanup_lock.release()
+            touched[f] = touched.get(f, 0) + 1
+            self.stats_entries += 1
+        if self.hard_stop.is_set():
+            return
+        for f in touched:
+            f.backend.fsync()                  # one fsync per file per batch
+            self.stats_fsyncs += 1
+        log.consume(start, run)                # durably retire the batch
+        for f, n in touched.items():
+            f.note_drained(n)
+        self.stats_batches += 1
+
+    # ------------------------------------------------------------------
+    def request_drain(self) -> None:
+        self.drain_event.set()
+        with self.log._committed:
+            self.log._committed.notify_all()
+
+    def end_drain(self) -> None:
+        self.drain_event.clear()
+
+    def shutdown(self) -> None:
+        """Graceful: drain everything, then stop."""
+        self.request_drain()
+        self.stop_event.set()
+        with self.log._committed:
+            self.log._committed.notify_all()
+        self.join(timeout=60)
+
+    def power_loss(self) -> None:
+        """Simulated crash: the thread dies wherever it is."""
+        self.hard_stop.set()
+        self.stop_event.set()
+        with self.log._committed:
+            self.log._committed.notify_all()
+        self.join(timeout=60)

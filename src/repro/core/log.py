@@ -1,0 +1,317 @@
+"""The NVMM circular write log (paper §II-B, §II-D, §III Algorithm 1).
+
+Layout inside the NVMM region::
+
+    [superblock | fd-path table | entry 0 | entry 1 | ... | entry N-1 ]
+
+Entries are fixed-size (paper §II-D: fixed size is what lets a thread commit
+its entry independently of uncommitted neighbours, and lets recovery skip an
+uncommitted hole and keep scanning).  Each 32-byte entry header packs the
+commit flag and the group index into a single word ``cg`` that lives in the
+first cacheline of the entry (paper: one flush, no extra cache miss):
+
+    cg == 0        free, or allocated-but-uncommitted
+    cg == 1        committed group head (or single-entry write)
+    cg == idx + 2  committed follower of the group whose head has monotonic
+                   index ``idx``
+
+Indices are monotonic u64; the slot of index ``i`` is ``i % N``.  A write
+larger than one entry allocates a *contiguous* block of entries with a single
+fetch-and-add (a faithful refinement of the paper's per-entry allocation: it
+keeps per-thread commit independence, and makes group extent recoverable via
+the head's follower count).  The group commits atomically through the head's
+commit flag alone (paper §II-D), in this order:
+
+    fill followers -> pwb -> fill head (cg=0) -> pwb -> pfence
+    -> head.cg = 1 -> pwb -> psync        (durable linearizability, §III)
+
+Two tails (paper §III "cleanup thread"):
+  * ``persistent_tail`` in NVMM — where recovery starts scanning;
+  * ``volatile_tail`` in DRAM — what writers check for free space.  An entry
+    is recycled for writers only after it is durably consumed
+    (cg zeroed + persistent tail advanced + pwb/pfence).
+"""
+from __future__ import annotations
+
+import struct
+import threading
+import zlib
+from typing import Iterator, Optional
+
+from repro.core.nvmm import NVMM
+from repro.core.policy import Policy, SUPERBLOCK
+
+MAGIC = 0x4E56_4341_4348_4531  # "NVCACHE1"
+VERSION = 1
+
+_SB = struct.Struct("<QII Q Q II")          # magic, ver, entry_size, n, ptail, fd_max, path_max
+_HDR = struct.Struct("<QQIIII")             # cg, off, fdid, length, nfollow, crc
+HDR_SIZE = _HDR.size                        # 32
+assert HDR_SIZE == 32
+
+CG_FREE = 0
+CG_HEAD = 1
+
+
+class LogFullTimeout(RuntimeError):
+    pass
+
+
+class Entry:
+    """Decoded view of a committed entry (header + payload memoryview)."""
+
+    __slots__ = ("idx", "cg", "off", "fdid", "length", "nfollow", "crc", "data")
+
+    def __init__(self, idx, cg, off, fdid, length, nfollow, crc, data):
+        self.idx = idx
+        self.cg = cg
+        self.off = off
+        self.fdid = fdid
+        self.length = length
+        self.nfollow = nfollow
+        self.crc = crc
+        self.data = data  # memoryview of length bytes (valid until recycled)
+
+
+class NVLog:
+    def __init__(self, nvmm: NVMM, policy: Policy, *, format: bool = True):
+        self.nvmm = nvmm
+        self.policy = policy
+        self.n = policy.log_entries
+        self.entry_size = policy.entry_size
+        self.base = policy.entries_base
+        if nvmm.size < policy.nvmm_bytes:
+            raise ValueError(f"NVMM region too small: {nvmm.size} < {policy.nvmm_bytes}")
+
+        self._lock = threading.Lock()           # guards head/volatile_tail
+        self._space = threading.Condition(self._lock)   # writers wait for space
+        self._committed = threading.Condition(self._lock)  # cleanup waits for work
+
+        if format:
+            self._format()
+            self.head = 0                       # volatile head (paper §II-B fn1)
+            self.volatile_tail = 0
+        else:
+            self._check_superblock()
+            ptail = self.persistent_tail
+            # after restart the only safe head is derived by recovery; until
+            # then treat log as starting where recovery left it.
+            self.head = ptail
+            self.volatile_tail = ptail
+
+    # ------------------------------------------------------------ superblock
+    def _format(self) -> None:
+        self.nvmm.store(0, b"\x00" * self.policy.entries_base)
+        self.nvmm.store(0, _SB.pack(MAGIC, VERSION, self.entry_size, self.n, 0,
+                                    self.policy.fd_max, self.policy.path_max))
+        # zero every entry header so cg == CG_FREE everywhere
+        for i in range(self.n):
+            self.nvmm.store(self.base + i * self.entry_size, b"\x00" * HDR_SIZE)
+        self.nvmm.pwb(0, self.policy.entries_base)
+        self.nvmm.psync()
+
+    def _check_superblock(self) -> None:
+        magic, ver, esz, n, _pt, fdm, pm = _SB.unpack_from(self.nvmm.load(0, _SB.size))
+        if magic != MAGIC or ver != VERSION:
+            raise ValueError("not an NVCache log region")
+        if esz != self.entry_size or n != self.n:
+            raise ValueError("policy mismatch with on-NVMM superblock")
+
+    @property
+    def persistent_tail(self) -> int:
+        return self.nvmm.load_u64(0x18)
+
+    def _store_persistent_tail(self, val: int) -> None:
+        self.nvmm.store_u64(0x18, val)
+        self.nvmm.pwb(0x18, 8)
+
+    # ------------------------------------------------------------- fd table
+    def fd_table_set(self, fdid: int, path: str) -> None:
+        raw = path.encode()
+        if len(raw) >= self.policy.path_max:
+            raise ValueError("path too long for fd table")
+        off = SUPERBLOCK + fdid * self.policy.path_max
+        self.nvmm.store(off, raw + b"\x00" * (self.policy.path_max - len(raw)))
+        self.nvmm.pwb(off, self.policy.path_max)
+        self.nvmm.psync()
+
+    def fd_table_get(self, fdid: int) -> Optional[str]:
+        off = SUPERBLOCK + fdid * self.policy.path_max
+        raw = bytes(self.nvmm.load(off, self.policy.path_max))
+        raw = raw.split(b"\x00", 1)[0]
+        return raw.decode() if raw else None
+
+    def fd_table_clear(self) -> None:
+        self.nvmm.store(SUPERBLOCK, b"\x00" * self.policy.fd_table_bytes)
+        self.nvmm.pwb(SUPERBLOCK, self.policy.fd_table_bytes)
+        self.nvmm.psync()
+
+    # ---------------------------------------------------------- entry codec
+    def _eoff(self, idx: int) -> int:
+        return self.base + (idx % self.n) * self.entry_size
+
+    def read_cg(self, idx: int) -> int:
+        return self.nvmm.load_u64(self._eoff(idx))
+
+    def read_entry(self, idx: int) -> Entry:
+        off = self._eoff(idx)
+        cg, foff, fdid, length, nfollow, crc = _HDR.unpack_from(self.nvmm.load(off, HDR_SIZE))
+        data = self.nvmm.load(off + HDR_SIZE, length)
+        return Entry(idx, cg, foff, fdid, length, nfollow, crc, data)
+
+    def is_committed(self, idx: int) -> bool:
+        """Committed = head with cg==1, or follower whose head has cg==1."""
+        cg = self.read_cg(idx)
+        if cg == CG_HEAD:
+            return True
+        if cg >= 2:
+            return self.read_cg(cg - 2) == CG_HEAD
+        return False
+
+    # ------------------------------------------------------------ allocation
+    def entries_needed(self, nbytes: int) -> int:
+        return max(1, -(-nbytes // self.policy.entry_data))
+
+    def alloc(self, k: int, timeout: Optional[float] = None) -> int:
+        """Reserve ``k`` contiguous entries; returns monotonic head index.
+
+        Blocks while the log is full (paper Alg. 1 ``next_entry`` line 37).
+        """
+        if k > self.n - 1:
+            raise ValueError("write exceeds log capacity; split upstream")
+        with self._space:
+            while self.head + k - self.volatile_tail > self.n:
+                if not self._space.wait(timeout=timeout):
+                    raise LogFullTimeout("log full")
+            idx = self.head
+            self.head += k
+            return idx
+
+    def try_alloc(self, k: int) -> Optional[int]:
+        with self._space:
+            if self.head + k - self.volatile_tail > self.n:
+                return None
+            idx = self.head
+            self.head += k
+            return idx
+
+    # ---------------------------------------------------------------- write
+    def fill_entry(self, idx: int, fdid: int, off: int, data: bytes, cg: int) -> None:
+        """Fill one entry (no commit).  ``cg`` is 0 for heads, head+2 for
+        followers; ``nfollow`` is patched on the head by :meth:`commit_group`."""
+        eoff = self._eoff(idx)
+        crc = zlib.crc32(data) if self.policy.verify_crc else 0
+        self.nvmm.store(eoff, _HDR.pack(cg, off, fdid, len(data), 0, crc))
+        self.nvmm.store(eoff + HDR_SIZE, data)
+        self.nvmm.pwb(eoff, HDR_SIZE + len(data))
+
+    def append(self, fdid: int, off: int, data: bytes,
+               timeout: Optional[float] = None) -> tuple[int, int]:
+        """The paper's write-cache append: alloc, fill, commit.
+
+        Returns ``(head_idx, k)``.  On return the write is durable
+        (synchronous durability) and ordered (durable linearizability).
+        """
+        ed = self.policy.entry_data
+        k = self.entries_needed(len(data))
+        head = self.alloc(k, timeout=timeout)
+        # followers first (paper §II-D: they must be durable before the head
+        # commit makes the whole group visible to recovery)
+        for j in range(1, k):
+            chunk = data[j * ed:(j + 1) * ed]
+            self.fill_entry(head + j, fdid, off + j * ed, chunk, cg=head + 2)
+        self.fill_entry(head, fdid, off, data[:ed], cg=CG_FREE)
+        # patch nfollow on the head before the commit flush
+        eoff = self._eoff(head)
+        self.nvmm.store(eoff + 0x18, struct.pack("<I", k - 1))
+        self.nvmm.pwb(eoff, HDR_SIZE)
+        self.nvmm.pfence()                    # entries durable before commit
+        self.nvmm.store_u64(eoff, CG_HEAD)    # commit the group
+        self.nvmm.pwb(eoff, 8)
+        self.nvmm.psync()                     # durable linearizability (§III)
+        with self._lock:
+            self._committed.notify_all()
+        return head, k
+
+    # -------------------------------------------------- consumption (cleanup)
+    def committed_run(self, start: int, limit: int) -> int:
+        """Number of consecutive committed entries at ``start`` (whole groups
+        only), capped at ``limit``.  Used by the cleanup thread to build a
+        batch; stops at the first uncommitted head (in-flight write)."""
+        count = 0
+        with self._lock:
+            head = self.head
+        while count < limit and start + count < head:
+            cg = self.read_cg(start + count)
+            if cg != CG_HEAD:
+                break  # hole: in-flight, uncommitted (wait for the writer)
+            group = 1 + self.read_entry(start + count).nfollow
+            if count + group > limit and count > 0:
+                break
+            count += group
+        return count
+
+    def wait_committed(self, min_entries: int, *, drain_event: threading.Event,
+                       stop_event: threading.Event, poll: float = 0.05) -> int:
+        """Block until >= min_entries consecutive committed entries exist at
+        the persistent tail, or a drain/stop is requested.  Returns the run
+        length found (0 if stopping)."""
+        while True:
+            run = self.committed_run(self.persistent_tail, self.policy.batch_max)
+            if run >= min_entries or (run > 0 and drain_event.is_set()):
+                return run
+            if stop_event.is_set():
+                return run
+            with self._committed:
+                self._committed.wait(timeout=poll)
+
+    def consume(self, start: int, count: int) -> None:
+        """Durably retire ``count`` entries at ``start`` (== persistent tail).
+
+        Paper cleanup step 2: zero the commit flags and advance the persistent
+        tail with pwb/pfence; step 3: advance the volatile tail so writers can
+        recycle the slots.
+        """
+        if start != self.persistent_tail:
+            raise AssertionError("cleanup must consume at the persistent tail")
+        for i in range(count):
+            eoff = self._eoff(start + i)
+            self.nvmm.store_u64(eoff, CG_FREE)
+            self.nvmm.pwb(eoff, 8)
+        self._store_persistent_tail(start + count)
+        self.nvmm.pfence()
+        with self._space:
+            self.volatile_tail = start + count
+            self._space.notify_all()
+
+    # ------------------------------------------------------------------ scan
+    def scan_committed(self, start: int, end: int) -> Iterator[Entry]:
+        """Yield committed entries in ``[start, end)`` in log order, skipping
+        holes.  Safe concurrently with writers (an entry is only yielded when
+        its group head is committed) — used by the dirty-miss procedure and by
+        recovery."""
+        idx = start
+        while idx < end:
+            cg = self.read_cg(idx)
+            if cg == CG_HEAD:
+                head = self.read_entry(idx)
+                yield head
+                for j in range(head.nfollow):
+                    e = self.read_entry(idx + 1 + j)
+                    if e.cg == idx + 2:
+                        yield e
+                idx += 1 + head.nfollow
+            else:
+                idx += 1
+
+    def snapshot_bounds(self) -> tuple[int, int]:
+        with self._lock:
+            return self.volatile_tail, self.head
+
+    @property
+    def used_entries(self) -> int:
+        with self._lock:
+            return self.head - self.volatile_tail
+
+    def verify_entry(self, e: Entry) -> bool:
+        return (not self.policy.verify_crc) or zlib.crc32(bytes(e.data)) == e.crc

@@ -1,0 +1,85 @@
+"""NVCache policy knobs (paper §IV-A defaults, scaled down in tests).
+
+Paper defaults: 4 KiB entries, 16 Mi entries (~64 GiB log), 250k-page read
+cache (~1 GiB), cleanup batches of [1000, 10000] entries.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+KIB = 1024
+MIB = 1024 * KIB
+GIB = 1024 * MIB
+
+CACHELINE = 64
+ENTRY_HEADER = 32
+PATH_MAX = 256
+FD_MAX = 256
+SUPERBLOCK = 4096  # superblock + fd table live in the first region of NVMM
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """Configuration of one NVCache instance."""
+
+    entry_size: int = 4 * KIB          # fixed-size log entries (paper §II-D)
+    log_entries: int = 16 * 1024       # paper: 16 Mi; tests/benches scale down
+    page_size: int = 4 * KIB           # read-cache page (power of two, §II-C fn2)
+    read_cache_pages: int = 1024       # paper: 250k pages (~1 GiB)
+    batch_min: int = 1000              # min entries before cleanup batches (§IV-A)
+    batch_max: int = 10000             # max entries per cleanup batch
+    verify_crc: bool = True            # beyond-paper: per-entry payload CRC32
+    fd_max: int = FD_MAX
+    path_max: int = PATH_MAX
+
+    def __post_init__(self):
+        if self.page_size & (self.page_size - 1):
+            raise ValueError("page_size must be a power of two (radix tree)")
+        if self.entry_size <= ENTRY_HEADER:
+            raise ValueError("entry_size must exceed the 32-byte header")
+        if self.log_entries < 2:
+            raise ValueError("log needs at least 2 entries")
+        # a batch larger than the log can never fill: clamp (paper's config
+        # always has batch << log; this guards scaled-down test configs)
+        cap = max(1, self.log_entries // 2)
+        if self.batch_min > cap:
+            object.__setattr__(self, "batch_min", cap)
+        if self.batch_max < self.batch_min:
+            object.__setattr__(self, "batch_max", self.batch_min)
+
+    @property
+    def entry_data(self) -> int:
+        return self.entry_size - ENTRY_HEADER
+
+    @property
+    def fd_table_bytes(self) -> int:
+        return self.fd_max * self.path_max
+
+    @property
+    def entries_base(self) -> int:
+        base = SUPERBLOCK + self.fd_table_bytes
+        return (base + self.page_size - 1) & ~(self.page_size - 1)
+
+    @property
+    def nvmm_bytes(self) -> int:
+        return self.entries_base + self.log_entries * self.entry_size
+
+
+#: Paper §IV-A configuration (64 GiB log, 1 GiB read cache).
+PAPER_DEFAULT = Policy(
+    entry_size=4 * KIB,
+    log_entries=16 * 1024 * 1024,
+    read_cache_pages=250_000,
+    batch_min=1000,
+    batch_max=10000,
+)
+
+#: Small configuration for unit/property tests.
+TEST_SMALL = Policy(
+    entry_size=256,
+    log_entries=64,
+    page_size=256,
+    read_cache_pages=8,
+    batch_min=4,
+    batch_max=16,
+)

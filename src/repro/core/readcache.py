@@ -1,0 +1,181 @@
+"""Volatile read cache (paper §II-C): page descriptors in a radix tree,
+page states {loaded, unloaded-clean, unloaded-dirty} via a dirty counter,
+and an LRU approximation with accessed flags (§II-D "scalable data
+structures").
+
+CPython notes: the paper gets scalability from CAS-based lock-free inserts
+and per-page locks.  Under the GIL, single bytecode dict/list mutations are
+atomic; we keep the paper's *structure* (radix tree, per-page atomic +
+cleanup locks, second-chance LRU with try-lock eviction) and use a short
+insert lock where the paper uses CAS.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Optional
+
+
+class AtomicInt:
+    __slots__ = ("_v", "_lock")
+
+    def __init__(self, v: int = 0):
+        self._v = v
+        self._lock = threading.Lock()
+
+    def inc(self, d: int = 1) -> int:
+        with self._lock:
+            self._v += d
+            return self._v
+
+    def dec(self, d: int = 1) -> int:
+        return self.inc(-d)
+
+    def get(self) -> int:
+        return self._v
+
+
+class PageContent:
+    """A cached page buffer; recycled through the LRU queue."""
+
+    __slots__ = ("data", "desc")
+
+    def __init__(self, page_size: int):
+        self.data = bytearray(page_size)
+        self.desc: Optional["PageDesc"] = None
+
+
+class PageDesc:
+    """Page descriptor (paper Table II / Fig. 2).
+
+    States: loaded (content is not None), unloaded-dirty (content None,
+    dirty>0), unloaded-clean (content None, dirty==0).
+    """
+
+    __slots__ = ("page_no", "atomic_lock", "cleanup_lock", "dirty", "content",
+                 "accessed")
+
+    def __init__(self, page_no: int):
+        self.page_no = page_no
+        self.atomic_lock = threading.Lock()    # write/read atomicity (§II-D)
+        self.cleanup_lock = threading.Lock()   # vs cleanup thread (§II-D)
+        self.dirty = AtomicInt(0)              # log entries touching this page
+        self.content: Optional[PageContent] = None
+        self.accessed = False
+
+
+class RadixTree:
+    """Radix tree keyed by page number (paper §II-C, like NOVA).
+
+    Fanout 64 (6 bits/level).  Nodes are fixed-size lists; descriptors are
+    created lazily on first touch and never removed until the tree is freed
+    on close (paper §II-D), which is what makes lock-free lookup safe.
+    """
+
+    FANOUT_BITS = 6
+    FANOUT = 1 << FANOUT_BITS
+
+    def __init__(self):
+        self._root: list = [None] * self.FANOUT
+        self._height = 1                     # levels below root
+        self._insert_lock = threading.Lock()
+
+    def _capacity_bits(self) -> int:
+        return self.FANOUT_BITS * self._height
+
+    def get(self, key: int) -> Optional[PageDesc]:
+        if key >> self._capacity_bits():
+            return None
+        node = self._root
+        for level in range(self._height - 1, -1, -1):
+            node = node[(key >> (level * self.FANOUT_BITS)) & (self.FANOUT - 1)]
+            if node is None:
+                return None
+        return node  # type: ignore[return-value]
+
+    def get_or_create(self, key: int) -> PageDesc:
+        found = self.get(key)
+        if found is not None:
+            return found
+        with self._insert_lock:
+            while key >> self._capacity_bits():   # grow upward
+                new_root: list = [None] * self.FANOUT
+                new_root[0] = self._root
+                self._root = new_root
+                self._height += 1
+            node = self._root
+            for level in range(self._height - 1, 0, -1):
+                slot = (key >> (level * self.FANOUT_BITS)) & (self.FANOUT - 1)
+                if node[slot] is None:
+                    node[slot] = [None] * self.FANOUT
+                node = node[slot]
+            slot = key & (self.FANOUT - 1)
+            if node[slot] is None:
+                node[slot] = PageDesc(key)
+            return node[slot]
+
+
+class LRUCache:
+    """Second-chance LRU over page contents (paper §II-D).
+
+    Eviction uses *try*-acquire on the victim's atomic lock: a busy victim is
+    re-enqueued and the next one is tried, which removes the lock-ordering
+    cycle between two concurrent misses.
+    """
+
+    def __init__(self, capacity: int, page_size: int):
+        self.capacity = max(2, capacity)
+        self.page_size = page_size
+        self._queue: deque[PageContent] = deque()
+        self._lock = threading.Lock()          # the paper's "LRU lock"
+        self._allocated = 0
+        self.stats_evictions = 0
+        self.stats_hits = 0
+        self.stats_misses = 0
+
+    def acquire_buffer(self) -> PageContent:
+        """Return a free page buffer, evicting if at capacity."""
+        with self._lock:
+            if self._allocated < self.capacity:
+                self._allocated += 1
+                return PageContent(self.page_size)
+        while True:
+            with self._lock:
+                if not self._queue:
+                    self._allocated += 1       # everything pinned: overflow
+                    return PageContent(self.page_size)
+                content = self._queue.popleft()
+                desc = content.desc
+                if desc is None:               # already detached
+                    return content
+                if not desc.atomic_lock.acquire(blocking=False):
+                    self._queue.append(content)
+                    continue
+            try:
+                if desc.accessed:              # second chance
+                    desc.accessed = False
+                    with self._lock:
+                        self._queue.append(content)
+                    continue
+                desc.content = None            # -> unloaded-{clean,dirty}
+                content.desc = None
+                self.stats_evictions += 1
+                return content
+            finally:
+                desc.atomic_lock.release()
+
+    def attach(self, desc: PageDesc, content: PageContent) -> None:
+        content.desc = desc
+        desc.content = content
+        desc.accessed = True
+        with self._lock:
+            self._queue.append(content)
+
+    def drop_all(self) -> None:
+        with self._lock:
+            for c in self._queue:
+                if c.desc is not None:
+                    c.desc.content = None
+                    c.desc = None
+            self._queue.clear()
+            self._allocated = 0

@@ -1,0 +1,60 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On TPU the Pallas implementations run; everywhere else (this CPU container,
+including the 512-fake-device dry-run) the jnp oracles from ``ref.py`` run —
+same semantics, validated against each other in ``tests/test_kernels_*``.
+Set ``REPRO_FORCE_PALLAS_INTERPRET=1`` to exercise the kernel bodies in
+interpret mode outside tests.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except RuntimeError:
+        return False
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_FORCE_PALLAS_INTERPRET", "0") == "1"
+
+
+# ---------------------------------------------------------- flash attention
+
+def flash_attention(q, k, v, *, causal=True, window=0, scale=None):
+    if _on_tpu() or _interpret():
+        from repro.kernels.flash_attention import flash_attention_pallas
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      scale=scale, interpret=not _on_tpu())
+    return _ref.attention_ref(q, k, v, causal=causal, window=window, scale=scale)
+
+
+# --------------------------------------------------------------------- SSD
+
+def ssd(x, dt, A, B, C, *, chunk=256):
+    if _on_tpu() or _interpret():
+        from repro.kernels.ssd_scan import ssd_pallas
+        return ssd_pallas(x, dt, A, B, C, chunk=chunk, interpret=not _on_tpu())
+    return _ref.ssd_ref(x, dt, A, B, C, chunk=chunk)
+
+
+# ----------------------------------------------------------------- quantize
+
+def quantize(x, *, group=256):
+    if _on_tpu() or _interpret():
+        from repro.kernels.quantize import quantize_pallas
+        return quantize_pallas(x, group=group, interpret=not _on_tpu())
+    return _ref.quantize_ref(x, group=group)
+
+
+def dequantize(q, scale, *, group=256, dtype=jnp.float32):
+    return _ref.dequantize_ref(q, scale, group=group, dtype=dtype)

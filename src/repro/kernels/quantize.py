@@ -1,0 +1,57 @@
+"""Symmetric int8 group quantization as a Pallas TPU kernel.
+
+Used on the checkpoint path (shards are quantized before being appended to
+the NVMM log — smaller entries defer the paper's Fig.-5 log-saturation
+point) and for compressed gradient all-reduce.  One grid cell quantizes a
+(blk_r x group) VMEM tile: an amax reduction plus an elementwise scale —
+bandwidth-bound by design, tiles sized to stream through VMEM.
+
+Oracle: ``repro.kernels.ref.quantize_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)              # (blk_r, group)
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def quantize_pallas(x, *, group=256, blk_r=256, interpret=False):
+    """x: any shape with last dim divisible by ``group``.
+    Returns (q int8 same shape, scales f32 (..., last/group))."""
+    shape = x.shape
+    assert shape[-1] % group == 0
+    ng = shape[-1] // group
+    rows = 1
+    for d in shape[:-1]:
+        rows *= d
+    xr = x.reshape(rows * ng, group)
+    R = xr.shape[0]
+    blk = min(blk_r, R)
+    pad = (-R) % blk
+    if pad:
+        xr = jnp.pad(xr, ((0, pad), (0, 0)))
+
+    q, s = pl.pallas_call(
+        _kernel,
+        grid=(xr.shape[0] // blk,),
+        in_specs=[pl.BlockSpec((blk, group), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((blk, group), lambda i: (i, 0)),
+                   pl.BlockSpec((blk, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct(xr.shape, jnp.int8),
+                   jax.ShapeDtypeStruct((xr.shape[0], 1), jnp.float32)],
+        interpret=interpret,
+    )(xr)
+    q = q[:R].reshape(shape)
+    s = s[:R, 0].reshape(*shape[:-1], ng)
+    return q, s

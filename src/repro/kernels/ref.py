@@ -1,0 +1,141 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the semantic ground truth: kernels are validated against them in
+interpret mode across shape/dtype sweeps, and the models use them as the
+portable (CPU / dry-run) execution path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------ attention ref
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  scale: Optional[float] = None):
+    """Materialized-scores attention. q: (B,Sq,H,D); k/v: (B,Skv,KV,Dk/Dv)."""
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bjkd->bkgqj", qg, k.astype(jnp.float32))
+    s *= scale if scale is not None else 1.0 / (D ** 0.5)
+    iq = jnp.arange(Sq)[:, None]
+    jk = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= jk <= iq
+    if window:
+        mask &= jk > iq - window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqj,bjkd->bkgqd", p, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, -1).astype(q.dtype)
+
+
+# ------------------------------------------------------------------ SSD ref
+
+def segsum(x):
+    """x: (..., T) -> (..., T, T); out[..., i, j] = sum_{j < k <= i} x[..., k],
+    -inf above the diagonal (the 1-SS decay matrix in log space)."""
+    T = x.shape[-1]
+    xe = jnp.broadcast_to(x[..., None, :], (*x.shape, T))  # [..., i, j] = x[j]... wait
+    xe = jnp.swapaxes(xe, -1, -2)                          # [..., i, j] = x[i]
+    mask = jnp.tril(jnp.ones((T, T), bool), -1)
+    xe = jnp.where(mask, xe, 0.0)
+    out = jnp.cumsum(xe, axis=-2)
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_ref(x, dt, A, B, C, *, chunk: int = 256, initial_state=None):
+    """Mamba-2 state-space duality (SSD), chunked exact algorithm.
+
+    x: (b, s, h, p)   dt: (b, s, h)  post-softplus
+    A: (h,)           negative real
+    B, C: (b, s, g, n) with h % g == 0
+    Returns (y: (b, s, h, p), final_state: (b, h, p, n)).
+
+    Implemented as a ``lax.scan`` over chunks carrying the (b,h,p,n) state:
+    only ONE chunk's (l x l) decay block is ever materialized.  (The naive
+    all-chunks-at-once formulation materializes (b,h,nc,l,l) tensors and was
+    the dominant memory-roofline term for the SSM/hybrid archs — see
+    EXPERIMENTS.md §Perf hillclimb 2.  The Pallas kernel is the same
+    algorithm with the state in VMEM scratch.)
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, "pad sequence to a chunk multiple upstream"
+    nc = s // chunk
+    rep = h // g
+
+    xd = (x * dt[..., None]).reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    Be = jnp.repeat(B, rep, axis=2).reshape(b, nc, chunk, h, n).astype(jnp.float32)
+    Ce = jnp.repeat(C, rep, axis=2).reshape(b, nc, chunk, h, n).astype(jnp.float32)
+    dA = (dt * A).reshape(b, nc, chunk, h).astype(jnp.float32)   # (b,c,l,h)
+
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), jnp.float32)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(state, inp):
+        xd_c, Be_c, Ce_c, dA_c = inp          # (b,l,h,p) (b,l,h,n) .. (b,l,h)
+        cums = jnp.cumsum(dA_c, axis=1)       # (b,l,h)
+        seg = cums[:, :, None, :] - cums[:, None, :, :]        # (b,l,s,h)
+        # mask BEFORE exp: above-diagonal seg is large-positive (cums is
+        # decreasing), and grad(where(m, exp(inf), 0)) = 0*inf = NaN
+        seg = jnp.where(tri[None, :, :, None], seg, -jnp.inf)
+        L = jnp.exp(seg)
+        scores = jnp.einsum("blhn,bshn->blsh", Ce_c, Be_c) * L
+        y = jnp.einsum("blsh,bshp->blhp", scores, xd_c)        # intra-chunk
+        y += jnp.einsum("blhn,bhpn,blh->blhp", Ce_c, state, jnp.exp(cums))
+        decay = jnp.exp(cums[:, -1:, :] - cums)                # (b,l,h)
+        upd = jnp.einsum("blhp,blh,blhn->bhpn", xd_c, decay, Be_c)
+        state = state * jnp.exp(cums[:, -1, :])[:, :, None, None] + upd
+        return state, y
+
+    final, ys = jax.lax.scan(
+        step, initial_state.astype(jnp.float32),
+        (xd.transpose(1, 0, 2, 3, 4), Be.transpose(1, 0, 2, 3, 4),
+         Ce.transpose(1, 0, 2, 3, 4), dA.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p).astype(x.dtype)
+    return y, final
+
+
+def ssd_decode_ref(x, dt, A, B, C, state):
+    """One-token SSD recurrence.  x: (b,h,p); dt: (b,h); B,C: (b,g,n);
+    state: (b,h,p,n).  Returns (y: (b,h,p), state)."""
+    b, h, p = x.shape
+    g, n = B.shape[1], B.shape[2]
+    rep = h // g
+    Be = jnp.repeat(B, rep, axis=1).astype(jnp.float32)    # (b,h,n)
+    Ce = jnp.repeat(C, rep, axis=1).astype(jnp.float32)
+    dA = jnp.exp(dt.astype(jnp.float32) * A.astype(jnp.float32))  # (b,h)
+    xd = (x * dt[..., None]).astype(jnp.float32)
+    state = state * dA[..., None, None] + jnp.einsum("bhp,bhn->bhpn", xd, Be)
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ce)
+    return y.astype(x.dtype), state
+
+
+# ------------------------------------------------------------- quantize ref
+
+def quantize_ref(x, *, group: int = 256):
+    """Symmetric int8 group quantization along the last axis.
+
+    Returns (q: int8 same shape, scales: float32 (..., n_groups))."""
+    shape = x.shape
+    assert shape[-1] % group == 0
+    xg = x.reshape(*shape[:-1], shape[-1] // group, group).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xg), axis=-1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xg / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q.reshape(shape), scale
+
+
+def dequantize_ref(q, scale, *, group: int = 256, dtype=jnp.float32):
+    shape = q.shape
+    qg = q.reshape(*shape[:-1], shape[-1] // group, group).astype(jnp.float32)
+    return (qg * scale[..., None]).reshape(shape).astype(dtype)

@@ -1,0 +1,123 @@
+"""Mamba-2 SSD chunked scan as a Pallas TPU kernel.
+
+TPU-native adaptation of the SSD algorithm: one grid cell = (batch·head,
+chunk).  The chunk dimension is the innermost, "arbitrary" grid axis; the
+running inter-chunk state (P x N, fp32) lives in VMEM scratch and carries
+across chunks — the sequential recurrence never touches HBM.  The
+intra-chunk block (Q x Q decay-masked attention-like matmul) is MXU work;
+Q=chunk, P=head_dim, N=state are all 128-aligned for the production config
+(mamba2-780m: Q=256, P=64, N=128).
+
+Oracle: ``repro.kernels.ref.ssd_ref`` (also the CPU execution path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, y_ref, st_out_ref, state_scr,
+            *, nchunks, chunk):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)            # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)          # (Q,)
+    A = A_ref[0].astype(jnp.float32)            # (1,) scalar for this head
+    Bm = B_ref[0].astype(jnp.float32)           # (Q, N)
+    Cm = C_ref[0].astype(jnp.float32)           # (Q, N)
+
+    dA = dt * A[0]                              # (Q,)
+    cums = jnp.cumsum(dA)                       # (Q,)
+    xd = x * dt[:, None]
+
+    # intra-chunk: L[i,j] = exp(cums[i]-cums[j]) for i>=j else 0
+    # (mask before exp: above-diagonal seg is large-positive)
+    seg = cums[:, None] - cums[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.exp(jnp.where(tri, seg, -jnp.inf))
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ()))) * L  # (Q,Q)
+    y = jax.lax.dot(scores, xd)                                        # (Q,P)
+
+    # inter-chunk contribution from the carried state
+    state = state_scr[...]                                             # (P,N)
+    y += jnp.exp(cums)[:, None] * jax.lax.dot_general(
+        Cm, state, (((1,), (1,)), ((), ())))                           # (Q,P)
+
+    # state update: state' = e^{sum dA} * state + sum_i e^{sum-cums_i} xd_i B_i^T
+    total = cums[chunk - 1]
+    decay = jnp.exp(total - cums)                                      # (Q,)
+    upd = jax.lax.dot_general(xd * decay[:, None], Bm,
+                              (((0,), (0,)), ((), ())))                # (P,N)
+    state_scr[...] = jnp.exp(total) * state + upd
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nchunks - 1)
+    def _emit_state():
+        st_out_ref[0] = state_scr[...]
+
+
+def ssd_pallas(x, dt, A, B, C, *, chunk=256, interpret=False):
+    """Same contract as ``ref.ssd_ref``: x (b,s,h,p), dt (b,s,h), A (h,),
+    B/C (b,s,g,n).  Returns (y (b,s,h,p), final_state (b,h,p,n))."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    assert s % chunk == 0
+    nc = s // chunk
+
+    # layout: one row per (batch, head)
+    xr = x.transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    dtr = dt.transpose(0, 2, 1).reshape(b * h, s)
+    Ar = jnp.tile(A, b).reshape(b * h, 1)
+    Br = B.transpose(0, 2, 1, 3).reshape(b * g, s, n)
+    Cr = C.transpose(0, 2, 1, 3).reshape(b * g, s, n)
+
+    kern = functools.partial(_kernel, nchunks=nc, chunk=chunk)
+    y, st = pl.pallas_call(
+        kern,
+        grid=(b * h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda r, c: (r, c, 0)),
+            pl.BlockSpec((1, chunk), lambda r, c: (r, c)),
+            pl.BlockSpec((1, 1), lambda r, c: (r, 0)),
+            pl.BlockSpec((1, chunk, n), lambda r, c, rep=rep: (r // rep, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda r, c, rep=rep: (r // rep, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda r, c: (r, c, 0)),
+            pl.BlockSpec((1, p, n), lambda r, c: (r, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, s, p), x.dtype),
+            jax.ShapeDtypeStruct((b * h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[_vmem((p, n))],
+        compiler_params=_tpu_params(),
+        interpret=interpret,
+    )(xr, dtr, Ar, Br, Cr)
+    y = y.reshape(b, h, s, p).transpose(0, 2, 1, 3)
+    st = st.reshape(b, h, p, n)
+    return y, st
+
+
+def _vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, jnp.float32)
+
+
+def _tpu_params():
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        return pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"))
+    except Exception:
+        return None

@@ -1,0 +1,25 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax init; everything else
+sees the single real CPU device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 v5e pod (data, model) or 2 pods (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for CPU multi-device tests (8 fake devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_single_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))

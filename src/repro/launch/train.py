@@ -1,0 +1,75 @@
+"""Training launcher.
+
+    python -m repro.launch.train --arch llama3.2-1b --smoke --steps 50
+
+Wires: config -> model -> AdamW -> deterministic data pipeline -> NVCache
+(fast persistent tier in front of the blob tier) -> train loop with
+synchronous-durability checkpoints, metrics JSONL and crash-safe resume.
+On this container use --smoke (reduced config); the full configs are for
+the production mesh (see repro.launch.dryrun).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs.registry import all_archs, get_config, get_smoke
+from repro.core import NVCache, Policy
+from repro.data.pipeline import SyntheticTokens
+from repro.launch.mesh import make_debug_mesh
+from repro.models.registry import build
+from repro.optim.adamw import AdamW
+from repro.optim.schedules import warmup_cosine
+from repro.storage.fsapi import NVCacheFS
+from repro.storage.tiers import BLOB, Tier
+from repro.train import loop as train_loop
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b", choices=all_archs())
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config runnable on CPU")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--mesh", default="none", choices=["none", "debug"])
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--log-mib", type=float, default=64)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    model = build(cfg)
+    opt = AdamW(lr=args.lr, schedule=warmup_cosine(10, args.steps))
+    pipe = SyntheticTokens(cfg.vocab, args.batch, args.seq, seed=0,
+                           family=cfg.family, d_model=cfg.d_model)
+
+    policy = Policy(entry_size=16384,
+                    log_entries=max(64, int(args.log_mib * (1 << 20) // 16384)),
+                    read_cache_pages=256, batch_min=16, batch_max=1024,
+                    verify_crc=False)
+    tier = Tier(BLOB)                      # the slow/blob tier
+    nv = NVCache(policy, tier)
+    fs = NVCacheFS(nv)
+
+    mesh = make_debug_mesh() if args.mesh == "debug" else None
+    state, hist = train_loop.train(
+        model, opt, pipe, fs, total_steps=args.steps,
+        ckpt_every=args.ckpt_every, mesh=mesh,
+        compress_grads=args.compress_grads)
+    nv.flush()
+    print(json.dumps({
+        "arch": cfg.arch, "steps": len(hist),
+        "first_loss": hist[0]["loss"] if hist else None,
+        "last_loss": hist[-1]["loss"] if hist else None,
+        "nvcache": nv.stats(),
+    }, indent=1))
+    nv.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,140 @@
+"""Mamba-2 (SSD) block: in-proj -> causal depthwise conv -> SSD scan ->
+gated RMSNorm -> out-proj.  Train/prefill use the chunked SSD algorithm
+(`repro.kernels` — Pallas on TPU, jnp oracle elsewhere); decode is the
+O(1)-state recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.layers import dense_init, rmsnorm
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    g, n = 1, cfg.ssm_state
+    h = cfg.ssm_heads
+    conv_dim = di + 2 * g * n
+    return di, g, n, h, conv_dim
+
+
+def ssm_init(cfg: ModelConfig, key):
+    di, g, n, h, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * g * n + h), d, cfg.pdt),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, conv_dim), cfg.ssm_conv, cfg.pdt),
+        "conv_b": jnp.zeros((conv_dim,), cfg.pdt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(cfg.pdt),
+        "D": jnp.ones((h,), cfg.pdt),
+        "dt_bias": jnp.zeros((h,), cfg.pdt),
+        "gnorm": jnp.ones((di,), cfg.pdt),
+        "out_proj": dense_init(ks[2], (di, d), di, cfg.pdt),
+    }
+
+
+def _split(cfg, zxbcdt):
+    di, g, n, h, _ = _dims(cfg)
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:2 * di + 2 * g * n]
+    dt = zxbcdt[..., 2 * di + 2 * g * n:]
+    return z, xBC, dt
+
+
+def causal_conv(xBC, w, b):
+    """Depthwise causal conv along sequence. xBC: (B,S,C); w: (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def ssm_forward(cfg: ModelConfig, p, x, *, return_state=False, ssd_fn=None):
+    """Full-sequence path.  x: (B, S, d_model)."""
+    from repro.kernels import ops as kops
+    ssd_fn = ssd_fn or kops.ssd
+    di, g, n, h, conv_dim = _dims(cfg)
+    B_, S, _ = x.shape
+    P = cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xBC, dt = _split(cfg, zxbcdt)
+    xBC = causal_conv(xBC, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
+    from repro.parallel import context as pctx
+    xs = xBC[..., :di].reshape(B_, S, h, P)
+    Bs = xBC[..., di:di + g * n].reshape(B_, S, g, n)
+    Cs = xBC[..., di + g * n:].reshape(B_, S, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xs_res = xs                          # un-padded, for the D skip term
+    # pad heads so the SSD shards over the model axis (hillclimb 2), then
+    # pin head axes — otherwise the partitioner replicates the whole scan
+    hp = h
+    if cfg.ssm_pad_heads_to and h % cfg.ssm_pad_heads_to:
+        hp = -(-h // cfg.ssm_pad_heads_to) * cfg.ssm_pad_heads_to
+        xs = jnp.pad(xs, ((0, 0), (0, 0), (0, hp - h), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, 0), (0, hp - h)))
+        A = jnp.pad(A, (0, hp - h), constant_values=-1.0)
+    xs = pctx.constrain(xs, ("__dp__", None, "model", None))
+    dt = pctx.constrain(dt, ("__dp__", None, "model"))
+    # pad sequence to a chunk multiple
+    chunk = min(cfg.ssm_chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bs = jnp.pad(Bs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cs = jnp.pad(Cs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    y, state = ssd_fn(xs, dt, A, Bs, Cs, chunk=chunk)
+    y = y[:, :S, :h]
+    state = state[:, :h]
+    y = y + xs_res * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B_, S, di)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p["gnorm"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    if return_state:
+        # conv state: last (K-1) raw (pre-conv) channels for decode continuation
+        K = cfg.ssm_conv
+        tail = x[:, -(K - 1):, :] if S >= K - 1 else x
+        pre = tail @ p["in_proj"].astype(x.dtype)
+        _, xBC_raw, _ = _split(cfg, pre)
+        if S < K - 1:
+            xBC_raw = jnp.pad(xBC_raw, ((0, 0), (K - 1 - S, 0), (0, 0)))
+        return out, (state, xBC_raw)
+    return out
+
+
+def ssm_decode(cfg: ModelConfig, p, x, state, conv_state):
+    """One-token step.  x: (B, 1, d); state: (B,h,P,n);
+    conv_state: (B, K-1, conv_dim) raw (pre-activation) conv inputs."""
+    from repro.kernels.ref import ssd_decode_ref
+    di, g, n, h, conv_dim = _dims(cfg)
+    P = cfg.ssm_head_dim
+    B_ = x.shape[0]
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xBC_new, dt = _split(cfg, zxbcdt)            # (B,1,·)
+    window = jnp.concatenate([conv_state, xBC_new], axis=1)   # (B,K,conv)
+    w = p["conv_w"].astype(x.dtype)
+    conv_out = jnp.einsum("bkc,kc->bc", window, w) + p["conv_b"].astype(x.dtype)
+    xBC = jax.nn.silu(conv_out)                     # (B, conv_dim)
+    xs = xBC[..., :di].reshape(B_, h, P)
+    Bs = xBC[..., di:di + g * n].reshape(B_, g, n)
+    Cs = xBC[..., di + g * n:].reshape(B_, g, n)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, state = ssd_decode_ref(xs, dtv, A, Bs, Cs, state)
+    y = y + xs * p["D"].astype(y.dtype)[None, :, None]
+    y = y.reshape(B_, 1, di)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p["gnorm"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    conv_state = window[:, 1:, :]
+    return out, state, conv_state
+
+
+def ssm_init_cache(cfg: ModelConfig, batch, dtype):
+    di, g, n, h, conv_dim = _dims(cfg)
+    return (jnp.zeros((batch, h, cfg.ssm_head_dim, n), jnp.float32),
+            jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype))

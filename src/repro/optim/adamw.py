@@ -1,0 +1,67 @@
+"""AdamW with global-norm clipping and configurable moment dtype (bf16
+moments are the memory posture for the largest assigned model)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    moment_dtype: Optional[str] = None   # None: match param dtype
+    schedule: Optional[object] = None    # callable step -> lr scale
+
+    def _mdt(self, leaf):
+        return jnp.dtype(self.moment_dtype) if self.moment_dtype else leaf.dtype
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, self._mdt(p))
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        if self.clip_norm is not None:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gn, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+        else:
+            gn = jnp.float32(0.0)
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+        lr = self.lr * (self.schedule(step) if self.schedule else 1.0)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            mh = m_new / c1
+            vh = v_new / c2
+            delta = mh / (jnp.sqrt(vh) + self.eps) + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * delta).astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        updates = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return updates, {"m": m, "v": v, "step": step}, {"grad_norm": gn}
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))

@@ -1,0 +1,50 @@
+"""Gradient compression (distributed-optimization trick).
+
+Two pieces:
+  * ``compress_tree`` — int8 group quantize/dequantize every gradient leaf;
+    under pjit this bounds what the data-parallel all-reduce would carry
+    (the quantization error is what training actually sees, so convergence
+    impact is testable on CPU).
+  * ``compressed_psum`` — explicit int8 all-reduce for shard_map code paths
+    (pipeline parallelism): quantize, psum the int32 accumulators, dequant.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+def _leaf_compress(g, group):
+    flat = g.reshape(-1)
+    pad = (-flat.size) % group
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    q, s = kops.quantize(flat, group=group)
+    deq = kops.dequantize(q, s, group=group, dtype=g.dtype)
+    return deq[:g.size].reshape(g.shape)
+
+
+def compress_tree(grads, *, group: int = 256):
+    """Quantize->dequantize every leaf (simulates int8 gradient exchange)."""
+    return jax.tree.map(lambda g: _leaf_compress(g, group), grads)
+
+
+def compressed_psum(x, axis_name: str, *, group: int = 256):
+    """int8-compressed all-reduce for use inside shard_map.
+
+    Wire format is int8 payload + fp32 group scales (an all-gather-based
+    all-reduce): ~4x fewer bytes on the link than an fp32 psum; the
+    reduction itself happens locally after dequantization.
+    """
+    flat = x.reshape(-1)
+    pad = (-flat.size) % group
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    q, s = kops.quantize(flat, group=group)
+    qs = jax.lax.all_gather(q, axis_name)        # int8 on the wire
+    ss = jax.lax.all_gather(s, axis_name)
+    vals = jax.vmap(lambda qq, sc: kops.dequantize(qq, sc, group=group))(qs, ss)
+    out = vals.sum(0)
+    return out[:x.size].reshape(x.shape).astype(x.dtype)

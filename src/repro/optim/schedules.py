@@ -1,0 +1,18 @@
+"""LR schedules (as multiplicative factors on the base lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(warmup: int, total: int, floor: float = 0.1):
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(1.0, float(warmup))
+        prog = (step - warmup) / jnp.maximum(1.0, float(total - warmup))
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * jnp.clip(prog, 0, 1)))
+        return jnp.where(step < warmup, warm, cos)
+    return f
+
+
+def constant():
+    return lambda step: 1.0

@@ -1,0 +1,60 @@
+"""Trace-time mesh context.
+
+Model code is mesh-agnostic under pjit, but the explicit-EP MoE path uses
+``shard_map`` and therefore needs the concrete Mesh at trace time.  Step
+builders set it around tracing; with no mesh set, models fall back to the
+pjit-auto code paths.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+from jax.sharding import Mesh
+
+_LOCAL = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_LOCAL, "mesh", None)
+
+
+@contextlib.contextmanager
+def with_mesh(mesh: Optional[Mesh]):
+    prev = current_mesh()
+    _LOCAL.mesh = mesh
+    try:
+        yield
+    finally:
+        _LOCAL.mesh = prev
+
+
+def constrain(x, axes):
+    """Divisibility-checked ``with_sharding_constraint`` against the current
+    mesh; identity when no mesh is in scope (single-device paths).
+
+    ``axes``: per-dim mesh-axis name (or None).  Dims that don't divide the
+    axis size fall back to unconstrained.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec = []
+    for dim, ax in zip(x.shape, axes):
+        if ax == "__dp__":               # all non-model axes (the DP front)
+            ax = tuple(a for a in mesh.axis_names if a != "model")
+        if isinstance(ax, tuple):
+            total = 1
+            for a in ax:
+                total *= sizes.get(a, 1)
+            spec.append(ax if total > 0 and dim % total == 0 else None)
+        elif ax is not None and ax in sizes and dim % sizes[ax] == 0:
+            spec.append(ax)
+        else:
+            spec.append(None)
+    spec += [None] * (x.ndim - len(spec))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,161 @@
+"""Partition rules: DP / FSDP / TP / EP over the production mesh.
+
+Mesh axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod.  Baseline policy (MaxText-style fsdp+tensor):
+
+  * batch dims           -> ("pod", "data")           (DP across pods)
+  * attention heads / ffn / vocab -> "model"          (TP)
+  * MoE expert dim       -> "model"                   (EP: E/16 per shard)
+  * the largest remaining weight dim -> "data"        (FSDP / ZeRO-3;
+    optimizer moments follow the same specs, so ZeRO falls out)
+  * pods never shard parameters (inter-pod ICI is the slow tier: pods do
+    pure DP with one gradient all-reduce across "pod")
+
+Every axis assignment is divisibility-checked against the mesh so that
+e.g. granite's single KV head or hymba's 50 SSM heads silently fall back
+to replication instead of erroring.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+FSDP = "__fsdp__"    # placeholder resolved to "data" when fsdp is on
+
+# spec for the trailing dims of each named leaf (leading dims -> None)
+_RULES = {
+    # dense attention
+    "wq": (FSDP, "model"), "wk": (FSDP, "model"), "wv": (FSDP, "model"),
+    "wo": ("model", FSDP),
+    # mlp (swiglu)
+    "wg": (FSDP, "model"), "wu": (FSDP, "model"), "wd": ("model", FSDP),
+    # whisper mlp / biases
+    "w1": (FSDP, "model"), "b1": ("model",), "w2": ("model", FSDP), "b2": (None,),
+    # MLA
+    "wq_a": (FSDP, "model"), "wq_b": (FSDP, "model"),
+    "wkv_a": (FSDP, None), "wkv_b": (FSDP, "model"),
+    # MoE (rank>=3 leaves resolved by _MOE_RULES)
+    "router": (FSDP, None),
+    # SSM (activations replicated over model; weights FSDP only)
+    "in_proj": (FSDP, None), "out_proj": (FSDP, None),
+    "conv_w": (None, None), "conv_b": (None,),
+    # embeddings
+    "embed": ("model", FSDP), "unembed": (FSDP, "model"),
+    "pos_table": (FSDP, None), "dec_pos": (FSDP, None),
+}
+
+_MOE_RULES = {   # (E, d, f) / (E, f, d)
+    "wg": ("model", FSDP, None), "wu": ("model", FSDP, None),
+    "wd": ("model", None, FSDP),
+}
+
+
+def mesh_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _fits(dim: int, axis, sizes) -> bool:
+    if axis is None:
+        return True
+    if isinstance(axis, tuple):
+        total = 1
+        for a in axis:
+            total *= sizes.get(a, 1)
+        return dim % total == 0
+    return dim % sizes.get(axis, 1) == 0
+
+
+def _resolve(tail_spec, shape, sizes, fsdp):
+    """Right-align ``tail_spec`` onto ``shape``; divisibility-checked."""
+    spec = [None] * len(shape)
+    off = len(shape) - len(tail_spec)
+    if off < 0:
+        tail_spec = tail_spec[-len(shape):]
+        off = 0
+    for i, ax in enumerate(tail_spec):
+        if ax == FSDP:
+            ax = "data" if fsdp else None
+        if ax is not None and _fits(shape[off + i], ax, sizes):
+            spec[off + i] = ax
+    return P(*spec)
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+    return ""
+
+
+def _in_moe(path) -> bool:
+    return any(getattr(e, "key", None) == "moe" for e in path)
+
+
+def param_specs(params, mesh: Mesh, *, fsdp: bool = True):
+    """PartitionSpec tree mirroring ``params``."""
+    sizes = mesh_sizes(mesh)
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        if _in_moe(path) and name in _MOE_RULES and leaf.ndim >= 3:
+            return _resolve(_MOE_RULES[name], leaf.shape, sizes, fsdp)
+        if name in _RULES:
+            return _resolve(_RULES[name], leaf.shape, sizes, fsdp)
+        return P()      # norms, scalars, gates: replicated
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def batch_specs(batch, mesh: Mesh):
+    """Shard the leading batch dim over the DP axes.  For mrope positions
+    (3, B, S) the batch dim is axis 1."""
+    dp = dp_axes(mesh)
+    sizes = mesh_sizes(mesh)
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        bdim = 1 if name == "positions" and leaf.ndim == 3 else 0
+        spec = [None] * leaf.ndim
+        if _fits(leaf.shape[bdim], dp, sizes):
+            spec[bdim] = dp
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, batch)
+
+
+def cache_specs(cache, mesh: Mesh):
+    """Decode caches: batch over DP; KV-heads over model when divisible.
+    Layout (stacked over layers): k/v (L,B,S,KV,hd), ckv (L,B,S,r),
+    ssm_state (L,B,h,P,n), conv_state (L,B,K,c), pos scalar."""
+    dp = dp_axes(mesh)
+    sizes = mesh_sizes(mesh)
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        if leaf.ndim == 0 or name == "pos":
+            return P()
+        spec = [None] * leaf.ndim
+        if leaf.ndim >= 2 and _fits(leaf.shape[1], dp, sizes):
+            spec[1] = dp
+        if name in ("k", "v", "ek", "ev") and leaf.ndim == 5:
+            if _fits(leaf.shape[3], "model", sizes):
+                spec[3] = "model"            # TP over KV heads
+            elif _fits(leaf.shape[2], "model", sizes):
+                spec[2] = "model"            # context-parallel cache (MQA/GQA<16)
+        elif name in ("ckv", "krope") and leaf.ndim == 4 and \
+                _fits(leaf.shape[2], "model", sizes):
+            spec[2] = "model"                # MLA latent cache: shard sequence
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,151 @@
+"""Crash-consistency properties of the NVMM log protocol (paper §II-B/§III).
+
+The simulated NVMM tracks durability at cacheline granularity; ``crash()``
+lets hypothesis choose *which* un-flushed dirty lines happened to reach the
+persistence domain.  The properties:
+
+  P1 (synchronous durability): every write whose call returned before the
+     crash is fully recovered, for EVERY adversarial eviction choice.
+  P2 (atomicity): a write interrupted before its group-head commit is
+     recovered either fully or not at all — never partially.
+  P3 (order): recovery applies surviving writes in application order, so
+     the final byte state equals replaying the completed prefix in order.
+"""
+import os
+
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import NVCache, NVMM, Policy, recover
+from repro.core.log import NVLog
+from repro.storage.tiers import DRAM, Tier
+
+POL = Policy(entry_size=192, log_entries=32, page_size=256,
+             read_cache_pages=4, batch_min=2, batch_max=8)
+
+writes_st = st.lists(
+    st.tuples(st.integers(0, 2000),                   # offset
+              st.binary(min_size=1, max_size=700)),   # data (multi-entry ok)
+    min_size=1, max_size=12)
+
+
+def apply_all(writes):
+    img = bytearray()
+    for off, data in writes:
+        if off + len(data) > len(img):
+            img.extend(b"\x00" * (off + len(data) - len(img)))
+        img[off:off + len(data)] = data
+    return bytes(img)
+
+
+@settings(max_examples=60, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(writes=writes_st, evict=st.data())
+def test_p1_completed_writes_survive_any_crash(writes, evict):
+    tier = Tier(DRAM)
+    nv = NVCache(POL, tier, track_crashes=True)
+    fd = nv.open("/f")
+    for off, data in writes:
+        nv.pwrite(fd, data, off)
+    # power loss with adversarial eviction of un-flushed lines
+    nvmm = nv.crash(choose_evicted=lambda lines: evict.draw(
+        st.sets(st.sampled_from(sorted(lines)) if lines else st.nothing(),
+                max_size=len(lines))) if lines else [])
+    tier2 = Tier(DRAM)
+    # pre-drained bytes live in the old tier; copy them over (the slow tier
+    # itself is durable storage)
+    for path in tier.paths():
+        snap = tier.open(path).snapshot()
+        if snap:
+            tier2.open(path).pwrite(snap, 0)
+    recover(nvmm, POL, tier2.open)
+    got = tier2.open("/f").snapshot()
+    exp = apply_all(writes)
+    assert got[:len(exp)] == exp
+    assert all(b == 0 for b in got[len(exp):])
+
+
+@settings(max_examples=40, deadline=None)
+@given(presize=st.integers(0, 500),
+       torn_off=st.integers(0, 500),
+       torn=st.binary(min_size=POL.entry_size, max_size=POL.entry_size * 3))
+def test_p2_uncommitted_group_never_partially_recovered(presize, torn_off, torn):
+    """Fill a multi-entry group but crash before the head commit."""
+    tier = Tier(DRAM)
+    nvmm = NVMM(POL.nvmm_bytes, track=True)
+    log = NVLog(nvmm, POL, format=True)
+    log.fd_table_set(0, "/f")
+    if presize:
+        log.append(0, 0, b"\x11" * presize)           # committed baseline
+    # torn write: followers + head filled and flushed, but NO commit flag
+    ed = POL.entry_data
+    k = log.entries_needed(len(torn))
+    head = log.alloc(k)
+    for j in range(1, k):
+        log.fill_entry(head + j, 0, torn_off + j * ed, torn[j * ed:(j + 1) * ed], cg=head + 2)
+    log.fill_entry(head, 0, torn_off, torn[:ed], cg=0)
+    nvmm.pfence()
+    nvmm.crash()                                       # nothing else evicted
+    stats = recover(nvmm, POL, tier.open)
+    got = tier.open("/f").snapshot()
+    exp = b"\x11" * presize
+    assert got[:presize] == exp
+    # no byte of the torn write may appear beyond the committed baseline
+    if len(got) > presize:
+        assert all(b == 0 for b in got[presize:])
+    assert stats.entries_replayed == (1 if presize and presize <= ed
+                                      else log.entries_needed(presize) if presize else 0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(writes=writes_st)
+def test_p3_order_preserved_through_wraparound(writes):
+    """Many overlapping writes >> log capacity: final state == in-order replay."""
+    tier = Tier(DRAM)
+    nv = NVCache(POL, tier, track_crashes=True)
+    fd = nv.open("/f")
+    for rep in range(4):                               # force wraparound
+        for off, data in writes:
+            nv.pwrite(fd, data, off)
+    nvmm = nv.crash()                                  # nothing evicted
+    tier2 = Tier(DRAM)
+    for path in tier.paths():
+        snap = tier.open(path).snapshot()
+        if snap:
+            tier2.open(path).pwrite(snap, 0)
+    recover(nvmm, POL, tier2.open)
+    exp = apply_all(writes * 4)
+    got = tier2.open("/f").snapshot()
+    assert got[:len(exp)] == exp
+
+
+def test_commit_flag_alone_is_not_enough_without_data_flush():
+    """Sanity check of the crash model itself: if the protocol forgot the
+    pfence before the commit, adversarial eviction could surface a committed
+    entry with lost data — our CRC would catch it.  Here we verify the fence
+    ordering the protocol does perform: data lines are durable whenever the
+    commit line is."""
+    nvmm = NVMM(POL.nvmm_bytes, track=True)
+    log = NVLog(nvmm, POL, format=True)
+    log.fd_table_set(0, "/f")
+    log.append(0, 0, b"\xabcd".ljust(64, b"\x99"))
+    nvmm.crash()                                       # drop all un-flushed
+    tier = Tier(DRAM)
+    stats = recover(nvmm, POL, tier.open)
+    assert stats.entries_replayed == 1
+    assert stats.crc_failures == 0
+    assert tier.open("/f").snapshot()[:64] == b"\xabcd".ljust(64, b"\x99")
+
+
+def test_recovery_resets_log_and_fd_table():
+    nvmm = NVMM(POL.nvmm_bytes, track=True)
+    log = NVLog(nvmm, POL, format=True)
+    log.fd_table_set(3, "/x")
+    log.append(3, 10, b"hello")
+    nvmm.crash()
+    tier = Tier(DRAM)
+    recover(nvmm, POL, tier.open)
+    log2 = NVLog(nvmm, POL, format=False)
+    assert log2.persistent_tail == 0
+    assert log2.fd_table_get(3) is None
+    assert tier.open("/x").snapshot()[10:15] == b"hello"

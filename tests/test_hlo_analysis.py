@@ -1,0 +1,49 @@
+"""The trip-count-aware HLO analyzer against known-FLOPs programs."""
+import sys
+import os
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
+import hlo_analysis  # noqa: E402
+
+
+def _hlo(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops():
+    a = jnp.zeros((128, 256), jnp.float32)
+    b = jnp.zeros((256, 64), jnp.float32)
+    res = hlo_analysis.analyze(_hlo(lambda x, y: x @ y, a, b))
+    assert res["flops"] == 2 * 128 * 256 * 64
+
+
+def test_scan_multiplies_by_trip_count():
+    w = jnp.zeros((16, 64, 64), jnp.float32)   # 16 layers
+    x = jnp.zeros((8, 64), jnp.float32)
+
+    def f(x, w):
+        def body(h, wi):
+            return jnp.tanh(h @ wi), None
+        h, _ = jax.lax.scan(body, x, w)
+        return h
+
+    res = hlo_analysis.analyze(_hlo(f, x, w))
+    expected = 16 * 2 * 8 * 64 * 64
+    assert abs(res["flops"] - expected) / expected < 0.01, res["flops"]
+
+
+def test_batched_dot_contract_dims():
+    a = jnp.zeros((4, 32, 16), jnp.float32)
+    b = jnp.zeros((4, 16, 8), jnp.float32)
+    res = hlo_analysis.analyze(_hlo(lambda x, y: jnp.einsum("bij,bjk->bik", x, y), a, b))
+    assert res["flops"] == 2 * 4 * 32 * 16 * 8
+
+
+def test_bytes_positive_and_collectives_absent_on_cpu_single():
+    a = jnp.zeros((128, 128), jnp.float32)
+    res = hlo_analysis.analyze(_hlo(lambda x: (x + 1.0).sum(), a))
+    assert res["hbm_bytes"] > 128 * 128 * 4
+    assert res["wire_bytes"] == 0

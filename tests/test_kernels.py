@@ -1,0 +1,90 @@
+"""Pallas kernels vs jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.quantize import quantize_pallas
+from repro.kernels.ssd_scan import ssd_pallas
+
+KEY = jax.random.PRNGKey(42)
+
+
+@pytest.mark.parametrize("B,Sq,Skv,H,KV,D", [
+    (1, 32, 32, 2, 2, 16),
+    (2, 64, 64, 4, 2, 32),
+    (1, 48, 96, 4, 1, 64),      # MQA + cross-length
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None), (True, 24)])
+def test_flash_attention_matches_oracle(B, Sq, Skv, H, KV, D, dtype, causal, window):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, KV, D), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, KV, D), dtype)
+    got = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 blk_q=16, blk_k=16, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window or 0)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("b,s,h,p,g,n,chunk", [
+    (1, 32, 2, 8, 1, 8, 8),
+    (2, 64, 4, 16, 2, 16, 16),
+    (1, 128, 4, 32, 1, 32, 32),
+])
+def test_ssd_matches_oracle(b, s, h, p, g, n, chunk):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (b, s, g, n))
+    C = jax.random.normal(ks[4], (b, s, g, n))
+    y1, st1 = ssd_pallas(x, dt, A, B, C, chunk=chunk, interpret=True)
+    y2, st2 = ref.ssd_ref(x, dt, A, B, C, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(st1), np.asarray(st2), rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_chunked_equals_sequential_recurrence():
+    """The chunked SSD algorithm is exactly the sequential SSM recurrence."""
+    b, s, h, p, g, n = 1, 24, 2, 4, 1, 8
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (b, s, g, n))
+    C = jax.random.normal(ks[4], (b, s, g, n))
+    y, fin = ref.ssd_ref(x, dt, A, B, C, chunk=8)
+    state = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        yt, state = ref.ssd_decode_ref(x[:, t], dt[:, t], A, B[:, t], C[:, t], state)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(jnp.stack(ys, 1)),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(state), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("shape,group", [((64, 512), 256), ((3, 5, 256), 128),
+                                         ((1024,), 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quantize_matches_oracle(shape, group, dtype):
+    x = jax.random.normal(KEY, shape, dtype) * 3
+    q1, s1 = quantize_pallas(x, group=group, blk_r=16, interpret=True)
+    q2, s2 = ref.quantize_ref(x, group=group)
+    assert bool(jnp.all(q1 == q2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+
+
+def test_quantize_roundtrip_error_bound():
+    x = jax.random.normal(KEY, (128, 512)) * 5
+    q, s = ref.quantize_ref(x, group=256)
+    back = ref.dequantize_ref(q, s, group=256)
+    err = jnp.abs(back - x)
+    bound = jnp.abs(x).reshape(128, 2, 256).max(-1).repeat(256, -1).reshape(128, 512) / 127
+    assert bool(jnp.all(err <= bound + 1e-6))

@@ -1,0 +1,163 @@
+"""POSIX-facade behaviour of NVCache (paper §II-A, §III, Table III)."""
+import os
+
+import pytest
+
+from repro.core import NVCache, O_CREAT, O_RDONLY, O_RDWR, TEST_SMALL, Policy
+from repro.storage.tiers import DRAM, Tier
+
+
+def make_nv(policy: Policy = TEST_SMALL):
+    tier = Tier(DRAM)
+    return NVCache(policy, tier), tier
+
+
+def test_write_read_roundtrip():
+    nv, _ = make_nv()
+    fd = nv.open("/f", O_RDWR | O_CREAT)
+    assert nv.write(fd, b"hello world") == 11
+    nv.lseek(fd, 0)
+    assert nv.read(fd, 11) == b"hello world"
+    nv.close(fd)
+    nv.shutdown()
+
+
+def test_read_your_own_write_before_drain():
+    """Durable linearizability + read-after-write: the kernel page cache is
+    stale while the entry is in the log; the read must still be fresh."""
+    nv, tier = make_nv()
+    fd = nv.open("/f")
+    nv.pwrite(fd, b"A" * 1000, 0)
+    # backend may not have the bytes yet; NVCache read must
+    assert nv.pread(fd, 1000, 0) == b"A" * 1000
+    nv.close(fd)
+    assert tier.open("/f").snapshot()[:1000] == b"A" * 1000  # drained on close
+    nv.shutdown()
+
+
+def test_overwrite_and_partial_reads():
+    nv, _ = make_nv()
+    fd = nv.open("/f")
+    nv.pwrite(fd, bytes(range(200)) * 10, 0)       # 2000 bytes
+    nv.pwrite(fd, b"\xff" * 100, 500)
+    got = nv.pread(fd, 2000, 0)
+    exp = bytearray((bytes(range(200)) * 10))
+    exp[500:600] = b"\xff" * 100
+    assert got == bytes(exp)
+    nv.shutdown()
+
+
+def test_cursor_and_lseek_semantics():
+    nv, _ = make_nv()
+    fd = nv.open("/f")
+    nv.write(fd, b"0123456789")
+    assert nv.lseek(fd, 0, os.SEEK_CUR) == 10
+    nv.lseek(fd, 2, os.SEEK_SET)
+    assert nv.read(fd, 3) == b"234"
+    assert nv.lseek(fd, -1, os.SEEK_END) == 9
+    assert nv.read(fd, 5) == b"9"
+    nv.shutdown()
+
+
+def test_size_served_from_user_space():
+    """stat/size must reflect in-flight writes (paper §II-C)."""
+    nv, tier = make_nv()
+    fd = nv.open("/f")
+    nv.pwrite(fd, b"x" * 5000, 0)     # larger than the backend has seen
+    assert nv.stat_size(fd) == 5000
+    assert nv.stat_size("/f") == 5000
+    nv.shutdown()
+
+
+def test_fsync_is_noop_and_cheap():
+    nv, _ = make_nv()
+    fd = nv.open("/f")
+    nv.write(fd, b"abc")
+    nv.fsync(fd)      # must not raise, must not be needed for durability
+    nv.shutdown()
+
+
+def test_append_mode():
+    nv, _ = make_nv()
+    from repro.core import O_APPEND
+    fd = nv.open("/f", O_RDWR | O_CREAT | O_APPEND)
+    nv.write(fd, b"aaa")
+    nv.write(fd, b"bbb")
+    assert nv.pread(fd, 6, 0) == b"aaabbb"
+    nv.shutdown()
+
+
+def test_two_descriptors_independent_cursors():
+    nv, _ = make_nv()
+    fd1 = nv.open("/f")
+    fd2 = nv.open("/f")
+    nv.write(fd1, b"xyz")
+    assert nv.read(fd2, 3) == b"xyz"     # fd2 cursor starts at 0
+    nv.close(fd1)
+    nv.close(fd2)
+    nv.shutdown()
+
+
+def test_read_only_bypass():
+    nv, tier = make_nv()
+    tier.open("/ro").pwrite(b"prefilled", 0)
+    fd = nv.open("/ro", O_RDONLY)
+    assert nv.read(fd, 9) == b"prefilled"
+    assert nv._open and nv._files["/ro"].radix is None   # bypassed
+    nv.close(fd)
+    nv.shutdown()
+
+
+def test_large_write_group_commit():
+    """A write spanning many fixed-size entries commits atomically."""
+    nv, _ = make_nv()
+    fd = nv.open("/f")
+    blob = os.urandom(TEST_SMALL.entry_data * 5 + 37)
+    nv.pwrite(fd, blob, 13)
+    assert nv.pread(fd, len(blob), 13) == blob
+    nv.shutdown()
+
+
+def test_write_larger_than_log_splits():
+    nv, _ = make_nv()
+    fd = nv.open("/f")
+    blob = os.urandom(TEST_SMALL.entry_data * (TEST_SMALL.log_entries + 10))
+    nv.pwrite(fd, blob, 0)
+    assert nv.pread(fd, len(blob), 0) == blob
+    nv.shutdown()
+
+
+def test_flush_drains_everything():
+    nv, tier = make_nv()
+    fd = nv.open("/f")
+    nv.pwrite(fd, b"z" * 3000, 100)
+    nv.flush()
+    assert nv.log.used_entries == 0
+    assert tier.open("/f").snapshot()[100:3100] == b"z" * 3000
+    nv.shutdown()
+
+
+def test_stats_shape():
+    nv, _ = make_nv()
+    fd = nv.open("/f")
+    nv.write(fd, b"q")
+    s = nv.stats()
+    assert {"log_used", "dirty_misses", "cleanup_batches"} <= set(s)
+    nv.shutdown()
+
+
+def test_multi_application_instances():
+    """Paper §III Multi-application: two NVCache instances on separate
+    NVMM regions (DAX files) coexist independently."""
+    nv1, t1 = make_nv()
+    nv2, t2 = make_nv()
+    fd1 = nv1.open("/a")
+    fd2 = nv2.open("/a")            # same path, different namespaces
+    nv1.pwrite(fd1, b"one", 0)
+    nv2.pwrite(fd2, b"two", 0)
+    assert nv1.pread(fd1, 3, 0) == b"one"
+    assert nv2.pread(fd2, 3, 0) == b"two"
+    nv1.flush(); nv2.flush()
+    assert t1.open("/a").snapshot()[:3] == b"one"
+    assert t2.open("/a").snapshot()[:3] == b"two"
+    nv1.shutdown(); nv2.shutdown()

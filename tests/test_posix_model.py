@@ -1,0 +1,107 @@
+"""Model-based POSIX conformance: random op sequences through NVCache must
+behave exactly like an in-memory reference file (hypothesis-driven)."""
+import os
+
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import NVCache, Policy
+from repro.storage.tiers import DRAM, Tier
+
+POL = Policy(entry_size=128, log_entries=64, page_size=128,
+             read_cache_pages=4, batch_min=4, batch_max=16)
+
+
+class RefFile:
+    """The oracle: plain POSIX semantics in memory."""
+
+    def __init__(self):
+        self.data = bytearray()
+        self.cursor = 0
+
+    def pwrite(self, data, off):
+        end = off + len(data)
+        if end > len(self.data):
+            self.data.extend(b"\x00" * (end - len(self.data)))
+        self.data[off:end] = data
+
+    def pread(self, n, off):
+        if off >= len(self.data):
+            return b""
+        return bytes(self.data[off:off + n])
+
+    def write(self, data):
+        self.pwrite(data, self.cursor)
+        self.cursor += len(data)
+
+    def read(self, n):
+        out = self.pread(n, self.cursor)
+        self.cursor += len(out)
+        return out
+
+    def seek(self, off, whence):
+        if whence == os.SEEK_SET:
+            self.cursor = off
+        elif whence == os.SEEK_CUR:
+            self.cursor += off
+        else:
+            self.cursor = len(self.data) + off
+        return self.cursor
+
+
+ops_st = st.lists(st.one_of(
+    st.tuples(st.just("pwrite"), st.integers(0, 600),
+              st.binary(min_size=1, max_size=300)),
+    st.tuples(st.just("pread"), st.integers(0, 700), st.integers(1, 300)),
+    st.tuples(st.just("write"), st.binary(min_size=1, max_size=200)),
+    st.tuples(st.just("read"), st.integers(1, 200)),
+    st.tuples(st.just("seek"), st.integers(-50, 700),
+              st.sampled_from([os.SEEK_SET, os.SEEK_CUR, os.SEEK_END])),
+    st.tuples(st.just("size"),),
+    st.tuples(st.just("flush"),),
+), min_size=1, max_size=30)
+
+
+@settings(max_examples=60, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ops=ops_st)
+def test_nvcache_matches_posix_reference(ops):
+    nv = NVCache(POL, Tier(DRAM))
+    ref = RefFile()
+    fd = nv.open("/f")
+    try:
+        for op in ops:
+            if op[0] == "pwrite":
+                _, off, data = op
+                nv.pwrite(fd, data, off)
+                ref.pwrite(data, off)
+            elif op[0] == "pread":
+                _, off, n = op
+                assert nv.pread(fd, n, off) == ref.pread(n, off), op
+            elif op[0] == "write":
+                nv.write(fd, op[1])
+                ref.write(op[1])
+            elif op[0] == "read":
+                assert nv.read(fd, op[1]) == ref.read(op[1]), op
+            elif op[0] == "seek":
+                _, off, whence = op
+                if whence == os.SEEK_CUR or off >= 0:
+                    assert nv.lseek(fd, off, whence) == ref.seek(off, whence)
+            elif op[0] == "size":
+                assert nv.stat_size(fd) == len(ref.data)
+            elif op[0] == "flush":
+                nv.flush()
+        # final byte-for-byte equality
+        assert nv.pread(fd, len(ref.data) + 10, 0) == bytes(ref.data)
+    finally:
+        nv.shutdown()
+
+
+def test_flock_unlock_flushes():
+    tier = Tier(DRAM)
+    nv = NVCache(POL, tier)
+    fd = nv.open("/f")
+    nv.pwrite(fd, b"locked-write", 0)
+    nv.flock(fd)                    # acquire: no flush needed
+    nv.flock(fd, unlock=True)       # release: pending writes reach the tier
+    assert tier.open("/f").snapshot()[:12] == b"locked-write"
+    nv.shutdown()

@@ -1,0 +1,89 @@
+"""Fault runtime (heartbeats/stragglers/failover) and elastic re-mesh."""
+from repro.runtime.elastic import shard_rows, viable_mesh
+from repro.runtime.fault import HeartbeatMonitor
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _fleet(mon, n=8, spares=2):
+    for i in range(n):
+        mon.register(f"w{i}")
+    for i in range(spares):
+        mon.register(f"spare{i}", spare=True)
+
+
+def test_dead_worker_detection_and_failover():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(dead_after_s=30, clock=clk)
+    _fleet(mon)
+    mon.note_checkpoint(100)
+    for t in range(5):
+        clk.t = t * 10.0
+        for i in range(8):
+            if i != 3:                      # w3 dies after t=0
+                mon.beat(f"w{i}", t)
+            elif t == 0:
+                mon.beat("w3", 0)
+    plan = mon.plan()
+    assert plan is not None
+    assert plan.dead == ["w3"]
+    assert plan.replacements == {"w3": "spare0"}
+    assert plan.restart_step == 100
+    assert not plan.remesh
+    mon.apply(plan)
+    assert "w3" not in mon.workers
+    assert "spare0" not in mon.spares
+
+
+def test_straggler_detection():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(dead_after_s=1e9, straggler_factor=2.0, clock=clk)
+    _fleet(mon, n=6, spares=1)
+    for step in range(10):
+        for i in range(6):
+            clk.t = step * 1.0 + (0.9 if i == 5 else 0.0)
+            mon.beat(f"w{i}", step)
+    # w5's per-step rate equals the others (same cadence) -> no straggler
+    assert mon.stragglers() == []
+    # now w5 slows to 4x per step
+    for step in range(10, 16):
+        for i in range(5):
+            clk.t = step * 1.0
+            mon.beat(f"w{i}", step)
+    for step in range(10, 16):
+        clk.t = 12 + (step - 10) * 4.0
+        mon.beat("w5", step)
+    assert mon.stragglers() == ["w5"]
+
+
+def test_remesh_when_spares_exhausted():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(dead_after_s=5, clock=clk)
+    _fleet(mon, n=4, spares=1)
+    for i in range(4):
+        mon.beat(f"w{i}", 0)
+    clk.t = 100.0
+    mon.beat("w0", 1)
+    plan = mon.plan()                      # w1..w3 dead, only one spare
+    assert len(plan.dead) == 3
+    assert plan.remesh
+
+
+def test_viable_mesh_shapes():
+    assert viable_mesh(512) == ((2, 16, 16), ("pod", "data", "model"))
+    assert viable_mesh(256) == ((16, 16), ("data", "model"))
+    assert viable_mesh(240) == ((15, 16), ("data", "model"))
+    shape, axes = viable_mesh(200)          # 200 % 16 != 0 -> shrink TP
+    assert shape[0] * shape[1] == 200
+
+
+def test_shard_rows():
+    assert shard_rows("w", (64, 8), shard_idx=1, n_shards=4) == (16, 32)
+    assert shard_rows("w", (63, 8), shard_idx=1, n_shards=4) is None
+    assert shard_rows("s", (), shard_idx=0, n_shards=4) is None
