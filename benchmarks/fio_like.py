@@ -1,8 +1,11 @@
-"""FIO-style random-write engine shared by Figs. 4-7: psync 4 KiB buffers,
+"""FIO-style random-write engines shared by Figs. 4-7: psync 4 KiB buffers,
 fsync=1 semantics (synchronous durability on every stack), per-interval
-instantaneous throughput + running average latency + cumulative bytes."""
+instantaneous throughput + running average latency + cumulative bytes.
+``concurrent_random_write`` is the numjobs=N variant used by the sharded-log
+scaling experiment."""
 from __future__ import annotations
 
+import threading
 import time
 
 import numpy as np
@@ -48,4 +51,68 @@ def random_write(fs, *, total_mib: float, file_mib: float, bs: int = 4096,
         "samples": samples,
         "writes": n_ops - done_reads,
         "reads": done_reads,
+    }
+
+
+def concurrent_random_write(fs, *, threads: int = 4, total_mib: float,
+                            file_mib: float, bs: int = 4096,
+                            interval_s: float = 0.05,
+                            path_tmpl: str = "/fio{t}.dat", seed: int = 11):
+    """N writer threads, one file per thread (fio numjobs=N), synchronous
+    durability on every op.  The returned ``mib_per_s`` is *committed-write*
+    throughput: a pwrite only returns once its group is durable, so bytes
+    written per wall second == bytes committed per second.
+    """
+    n_ops = int(total_mib * (1 << 20)) // bs
+    per_thread = max(1, n_ops // threads)
+    n_slots = max(1, int(file_mib * (1 << 20)) // bs // threads)
+    buf = b"x" * bs
+    done = [0] * threads
+    lat = [0.0] * threads
+    finished = threading.Event()
+
+    def worker(t):
+        fd = fs.open(path_tmpl.format(t=t))
+        rng = np.random.default_rng(seed + t)
+        for i in range(per_thread):
+            off = int(rng.integers(0, n_slots)) * bs
+            t0 = time.perf_counter()
+            fs.pwrite(fd, buf, off)
+            fs.fsync(fd)
+            lat[t] += time.perf_counter() - t0
+            done[t] = i + 1
+
+    ts = [threading.Thread(target=worker, args=(t,)) for t in range(threads)]
+    samples = []
+    t_start = time.perf_counter()
+    for t in ts:
+        t.start()
+
+    def sampler():
+        mark_ops, mark_t = 0, t_start
+        while not finished.wait(interval_s):
+            now = time.perf_counter()
+            ops = sum(done)
+            samples.append({
+                "t": now - t_start,
+                "inst_mib_s": (ops - mark_ops) * bs / (now - mark_t) / (1 << 20),
+                "cum_mib": ops * bs / (1 << 20),
+            })
+            mark_ops, mark_t = ops, now
+
+    s = threading.Thread(target=sampler, daemon=True)
+    s.start()
+    for t in ts:
+        t.join()
+    finished.set()
+    s.join(timeout=5)
+    total = time.perf_counter() - t_start
+    ops = sum(done)
+    return {
+        "seconds": total,
+        "mib_per_s": ops * bs / total / (1 << 20),
+        "avg_lat_us": 1e6 * sum(lat) / max(1, ops),
+        "samples": samples,
+        "writes": ops,
+        "threads": threads,
     }

@@ -12,8 +12,13 @@ the elastic-scaling path re-slices checkpoints to a new device count
 without ever materializing the full array on one host.
 
 Payload encodings: raw | zstd | int8 group-quantized (+f32 scales, zstd'd)
-— the quantized mode shrinks NVMM log entries, pushing the paper's Fig.-5
-log-saturation point out by ~4x for checkpoint traffic.
+| zlib — the quantized mode shrinks NVMM log entries, pushing the paper's
+Fig.-5 log-saturation point out by ~4x for checkpoint traffic.
+
+``zstandard`` is an *optional* dependency: when absent, compressed writes
+transparently downgrade to zlib (recorded per record in its header, so a
+reader on any host decodes correctly), and only streams that were actually
+written with zstd require the package to read.
 """
 from __future__ import annotations
 
@@ -23,12 +28,36 @@ from typing import Optional
 
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:                       # optional dependency (see docstring)
+    zstandard = None
 
 MAGIC = b"RPCKPT01"
 _FOOT = struct.Struct("<QQI")       # index_off, index_len, index_crc
 
-ENC_RAW, ENC_ZSTD, ENC_INT8 = 0, 1, 2
+ENC_RAW, ENC_ZSTD, ENC_INT8, ENC_ZLIB = 0, 1, 2, 3
+
+
+def _compress(raw: bytes, *, force_zlib: bool = False) -> tuple[bytes, bool]:
+    """Compress with zstd when available (and not overridden), zlib otherwise.
+
+    Returns ``(payload, used_zlib)``.
+    """
+    if not force_zlib and zstandard is not None:
+        return zstandard.compress(raw, 3), False
+    return zlib.compress(raw, 6), True
+
+
+def _decompress(payload: bytes, used_zlib: bool) -> bytes:
+    if used_zlib:
+        return zlib.decompress(payload)
+    if zstandard is None:
+        raise ImportError(
+            "checkpoint record is zstd-compressed but `zstandard` is not "
+            "installed; install it or re-write the checkpoint")
+    return zstandard.decompress(payload)
 
 
 def _quant_np(x: np.ndarray, group: int = 256):
@@ -87,11 +116,17 @@ class Writer:
                 "s": start, "e": end, "enc": self.encoding}
         if self.encoding == ENC_INT8 and raw.dtype.kind == "f" and raw.size >= 256:
             q, scale, pad = _quant_np(raw.view(raw.dtype))
-            payload = zstandard.compress(q.tobytes() + scale.tobytes(), 3)
+            payload, used_zlib = _compress(q.tobytes() + scale.tobytes())
             meta["pad"] = pad
             meta["nsc"] = scale.size
-        elif self.encoding == ENC_ZSTD:
-            payload = zstandard.compress(raw.tobytes(), 3)
+            if used_zlib:
+                meta["zc"] = 1          # int8 payload compressed with zlib
+        elif self.encoding in (ENC_ZSTD, ENC_ZLIB):
+            # ENC_ZLIB is an explicit request for the portable codec — honour
+            # it even when zstandard is installed
+            payload, used_zlib = _compress(raw.tobytes(),
+                                           force_zlib=self.encoding == ENC_ZLIB)
+            meta["enc"] = ENC_ZLIB if used_zlib else ENC_ZSTD
         else:
             meta["enc"] = ENC_RAW
             payload = raw.tobytes()
@@ -158,14 +193,15 @@ class Reader:
         dt = np.dtype(meta["dt"])
         shape = [end - start] + meta["gs"][1:] if meta["gs"] else [1]
         if meta["enc"] == ENC_INT8:
-            blob = zstandard.decompress(payload)
+            blob = _decompress(payload, bool(meta.get("zc")))
             n = int(np.prod(shape))
             pad = meta["pad"]
             q = np.frombuffer(blob[:n + pad], np.int8)
             scale = np.frombuffer(blob[n + pad:], np.float32)
             return _dequant_np(q, scale, pad).astype(dt).reshape(shape)
-        if meta["enc"] == ENC_ZSTD:
-            return np.frombuffer(zstandard.decompress(payload), dt).reshape(shape)
+        if meta["enc"] in (ENC_ZSTD, ENC_ZLIB):
+            blob = _decompress(payload, meta["enc"] == ENC_ZLIB)
+            return np.frombuffer(blob, dt).reshape(shape)
         return np.frombuffer(payload, dt).reshape(shape)
 
     def close(self):

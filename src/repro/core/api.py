@@ -8,7 +8,7 @@ against libc, and transparently get
     committed in the NVMM log (paper Alg. 1),
   * durable linearizability — a write is visible to a reader only when it
     is durable (the psync before the per-page lock release),
-  * asynchronous propagation to the slow tier via the cleanup thread,
+  * asynchronous propagation to the slow tier via the per-shard drain pool,
   * ``fsync`` as a no-op (Table III: writes are already durable),
   * user-space file size/cursor (the kernel's may be stale, §II-C).
 
@@ -21,7 +21,7 @@ import os
 import threading
 from typing import Dict, Optional
 
-from repro.core.cleanup import CleanupThread
+from repro.core.cleanup import CleanupPool
 from repro.core.log import NVLog
 from repro.core.nvmm import NVMM
 from repro.core.policy import Policy
@@ -37,7 +37,7 @@ class File:
     """Per-(device,inode) state (paper §III "Open": the file table)."""
 
     __slots__ = ("path", "fdid", "backend", "radix", "size", "size_lock",
-                 "refs", "pending", "_drained")
+                 "refs", "pending", "shards_touched", "_drained")
 
     def __init__(self, path: str, fdid: int, backend):
         self.path = path
@@ -48,6 +48,7 @@ class File:
         self.size_lock = threading.Lock()
         self.refs = 0
         self.pending = AtomicInt(0)              # log entries not yet drained
+        self.shards_touched: set = set()         # sids holding entries for us
         self._drained = threading.Condition()
 
     def note_drained(self, n: int) -> None:      # called by the cleanup thread
@@ -97,7 +98,7 @@ class NVCache:
         self._next_fd = 3
         self._meta = threading.Lock()
         self._fdid_free = list(range(policy.fd_max - 1, -1, -1))
-        self.cleanup = CleanupThread(self.log, self._resolve_fdid)
+        self.cleanup = CleanupPool(self.log, self._resolve_fdid)
         self.cleanup.start()
         self._crashed = False
         self.stats_dirty_misses = 0
@@ -166,15 +167,17 @@ class NVCache:
 
     def close(self, fd: int) -> None:
         """Flush this file's pending writes to the kernel, then close
-        (paper §I: coherence across processes via flush-on-close)."""
+        (paper §I: coherence across processes via flush-on-close).  Only the
+        shards this file actually touched are asked to drain."""
         of = self._pop_fd(fd)
         f = of.file
-        self.cleanup.request_drain()
+        touched = set(f.shards_touched)
+        self.cleanup.request_drain(touched)
         try:
             if not f.wait_drained(timeout=60.0):
                 raise TimeoutError(f"drain of {f.path} timed out on close")
         finally:
-            self.cleanup.end_drain()
+            self.cleanup.end_drain(touched)
         with self._meta:
             f.refs -= 1
             if f.refs == 0:
@@ -203,14 +206,25 @@ class NVCache:
         of = self._of(fd)
         if of.flags & _ACCMODE == O_RDONLY:
             raise OSError("fd is read-only")
+        if off < 0:
+            raise OSError("negative offset (EINVAL)")
         f = of.file
         if not data:
             return 0
-        max_op = (self.policy.log_entries - 1) * self.policy.entry_data
+        pol = self.policy
+        max_op = (pol.entries_per_shard - 1) * pol.entry_data
+        split_stripes = pol.shards > 1 and pol.shard_route == "stripe"
         written = 0
         view = memoryview(data)
         while written < len(data):
-            chunk = view[written:written + max_op]
+            lim = max_op
+            if split_stripes:
+                # ops never span a stripe: overlapping writes always route to
+                # the same shard, keeping per-location order a shard-local
+                # property (see core/log.py docstring)
+                sb = pol.stripe_bytes
+                lim = min(lim, sb - (off + written) % sb)
+            chunk = view[written:written + lim]
             self._pwrite_op(f, bytes(chunk), off + written)
             written += len(chunk)
         return len(data)
@@ -225,7 +239,11 @@ class NVCache:
         for d in descs:                       # ascending page order: no deadlock
             d.atomic_lock.acquire()
         try:
-            head, k = self.log.append(f.fdid, off, data)   # durable on return
+            sid, head, k = self.log.append(f.fdid, off, data)  # durable on return
+            # shard membership must be visible before the pending count is:
+            # a concurrent close() that sees pending > 0 must also see the
+            # shard id, or it would drain the wrong subset and time out
+            f.shards_touched.add(sid)
             f.pending.inc(k)
             # dirty counters: one tick per (entry, page) overlap — must match
             # the cleanup thread's per-entry decrements
@@ -267,6 +285,8 @@ class NVCache:
     # ------------------------------------------------------------------ read
     def pread(self, fd: int, n: int, off: int) -> bytes:
         of = self._of(fd)
+        if off < 0:
+            raise OSError("negative offset (EINVAL)")
         f = of.file
         with f.size_lock:
             size = f.size
@@ -313,17 +333,24 @@ class NVCache:
                 content.data[len(raw):] = bytes(ps - len(raw))
             if d.dirty.get() > 0:
                 # dirty miss: replay committed log entries touching the page
-                # in log order (idempotent, so entries already propagated but
-                # not yet retired apply harmlessly).
+                # in global commit order — entries may live in several shards,
+                # so collect then sort by (seq, idx) before applying
+                # (idempotent, so entries already propagated but not yet
+                # retired apply harmlessly).
                 self.stats_dirty_misses += 1
-                tail, head = self.log.snapshot_bounds()
-                for e in self.log.scan_committed(tail, head):
-                    if e.fdid != f.fdid:
-                        continue
-                    s = max(e.off, base)
-                    t = min(e.off + e.length, base + ps)
+                # snapshot payload bytes at collection time: another shard's
+                # drain may recycle (and a writer refill) an entry between
+                # the scan and the sorted apply below
+                hits = [(e.seq, e.idx, e.off, bytes(e.data))
+                        for e in self.log.scan_all_committed()
+                        if e.fdid == f.fdid
+                        and e.off < base + ps and e.off + e.length > base]
+                hits.sort()
+                for _seq, _idx, eoff, edata in hits:
+                    s = max(eoff, base)
+                    t = min(eoff + len(edata), base + ps)
                     if s < t:
-                        content.data[s - base:t - base] = e.data[s - e.off:t - e.off]
+                        content.data[s - base:t - base] = edata[s - eoff:t - eoff]
             self.lru.attach(d, content)
 
     def read(self, fd: int, n: int) -> bytes:
@@ -343,25 +370,29 @@ class NVCache:
         file's pending writes to the kernel so other processes see them."""
         of = self._of(fd)
         if unlock:
-            self.cleanup.request_drain()
+            touched = set(of.file.shards_touched)
+            self.cleanup.request_drain(touched)
             try:
                 if not of.file.wait_drained(timeout=60.0):
                     raise TimeoutError(f"flock drain of {of.file.path} timed out")
             finally:
-                self.cleanup.end_drain()
+                self.cleanup.end_drain(touched)
 
     def lseek(self, fd: int, off: int, whence: int = os.SEEK_SET) -> int:
         of = self._of(fd)
         with of.cursor_lock:
             if whence == os.SEEK_SET:
-                of.cursor = off
+                target = off
             elif whence == os.SEEK_CUR:
-                of.cursor += off
+                target = of.cursor + off
             elif whence == os.SEEK_END:
                 with of.file.size_lock:
-                    of.cursor = of.file.size + off
+                    target = of.file.size + off
             else:
                 raise OSError("bad whence")
+            if target < 0:
+                raise OSError("negative seek (EINVAL)")  # cursor unchanged
+            of.cursor = target
             return of.cursor
 
     def stat_size(self, fd_or_path) -> int:
@@ -377,6 +408,7 @@ class NVCache:
     # ------------------------------------------------------------- stats
     def stats(self) -> dict:
         return {
+            "shards": self.policy.shards,
             "log_used": self.log.used_entries,
             "dirty_misses": self.stats_dirty_misses,
             "lru_hits": self.lru.stats_hits,

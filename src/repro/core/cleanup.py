@@ -1,34 +1,50 @@
-"""The cleanup thread (paper §II-A step 6, §III "Cleanup thread and batching").
+"""The drain pool (paper §II-A step 6, §III "Cleanup thread and batching"),
+one drain thread per log shard.
 
-Consumes committed entries in log order from the persistent tail and
-propagates them to the slow tier through ordinary ``pwrite`` calls (the
-writes land in the kernel page cache, which write-combines them — the
-paper's "volatile write cache behind a durable write cache"), then one
-``fsync`` per touched file per batch, then durably retires the batch
-(zero commit flags, advance persistent tail, pwb/pfence, advance volatile
-tail).
+Each :class:`CleanupThread` consumes committed entries in log order from its
+shard's persistent tail and propagates them to the slow tier through
+ordinary ``pwrite`` calls (the writes land in the kernel page cache, which
+write-combines them — the paper's "volatile write cache behind a durable
+write cache"), then one ``fsync`` per touched file per batch, then durably
+retires the batch (zero commit flags, advance the shard's persistent tail,
+pwb/pfence, advance the volatile tail).  Because any two overlapping writes
+are routed to the same shard (see :mod:`repro.core.log`), independent
+per-shard drains cannot reorder conflicting updates, and K shards drain to
+the slow tier concurrently.
 
-Batching (paper §IV-C): waits for at least ``batch_min`` committed entries
-unless a drain is requested (close/flush/log-full backpressure), consumes at
-most ``batch_max``.
+Batching (paper §IV-C): each drainer waits for at least ``batch_min``
+committed entries in its shard unless a drain is requested (close/flush/
+log-full backpressure), and consumes at most ``batch_max`` — the shared
+:class:`~repro.core.policy.Policy` bounds are the pool's common
+backpressure contract.
+
+:class:`CleanupPool` owns the threads and lets callers target a drain at
+just the shards a file actually touched (``fsync``/``close`` wait only on
+those) or at every shard (``flush``).
 """
 from __future__ import annotations
 
 import threading
-from typing import Callable, Optional
+from typing import Callable, Iterable, Optional
 
-from repro.core.log import NVLog
+from repro.core.log import LogShard, NVLog
 
 
 class CleanupThread(threading.Thread):
-    def __init__(self, log: NVLog, resolve_file: Callable[[int], Optional[object]],
-                 *, name: str = "nvcache-cleanup"):
-        super().__init__(name=name, daemon=True)
+    """Drains one shard (the paper's cleanup thread when K == 1)."""
+
+    def __init__(self, log: NVLog, shard: LogShard,
+                 resolve_file: Callable[[int], Optional[object]],
+                 *, name: Optional[str] = None):
+        super().__init__(name=name or f"nvcache-drain-{shard.sid}", daemon=True)
         self.log = log
+        self.shard = shard
         self.resolve_file = resolve_file      # fdid -> File (api.File) or None
         self.drain_event = threading.Event()  # ignore batch_min
         self.stop_event = threading.Event()   # finish current batch, then exit
         self.hard_stop = threading.Event()    # simulated power loss: exit NOW
+        self._drain_count = 0                 # nested drain requests
+        self._drain_lock = threading.Lock()
         self.error: Optional[BaseException] = None
         self.stats_batches = 0
         self.stats_entries = 0
@@ -38,9 +54,9 @@ class CleanupThread(threading.Thread):
         try:
             while not self.hard_stop.is_set():
                 min_needed = 1 if self.drain_event.is_set() else self.log.policy.batch_min
-                run = self.log.wait_committed(min_needed,
-                                              drain_event=self.drain_event,
-                                              stop_event=self.stop_event)
+                run = self.shard.wait_committed(min_needed,
+                                               drain_event=self.drain_event,
+                                               stop_event=self.stop_event)
                 if run == 0:
                     if self.stop_event.is_set() or self.hard_stop.is_set():
                         return
@@ -51,11 +67,11 @@ class CleanupThread(threading.Thread):
 
     # ------------------------------------------------------------------
     def _consume_batch(self, run: int) -> None:
-        log = self.log
-        ps = log.policy.page_size
-        start = log.persistent_tail
+        shard = self.shard
+        ps = self.log.policy.page_size
+        start = shard.persistent_tail
         touched = {}          # File -> n_entries drained for it
-        for e in log.scan_committed(start, start + run):
+        for e in shard.scan_committed(start, start + run):
             if self.hard_stop.is_set():
                 return        # power loss mid-batch: nothing retired, log replays
             f = self.resolve_file(e.fdid)
@@ -82,32 +98,93 @@ class CleanupThread(threading.Thread):
         for f in touched:
             f.backend.fsync()                  # one fsync per file per batch
             self.stats_fsyncs += 1
-        log.consume(start, run)                # durably retire the batch
+        shard.consume(start, run)              # durably retire the batch
         for f, n in touched.items():
             f.note_drained(n)
         self.stats_batches += 1
 
     # ------------------------------------------------------------------
     def request_drain(self) -> None:
-        self.drain_event.set()
-        with self.log._committed:
-            self.log._committed.notify_all()
+        with self._drain_lock:
+            self._drain_count += 1
+            self.drain_event.set()
+        self.shard.notify_committed()
 
     def end_drain(self) -> None:
-        self.drain_event.clear()
+        with self._drain_lock:
+            self._drain_count = max(0, self._drain_count - 1)
+            if self._drain_count == 0:
+                self.drain_event.clear()
 
     def shutdown(self) -> None:
         """Graceful: drain everything, then stop."""
         self.request_drain()
         self.stop_event.set()
-        with self.log._committed:
-            self.log._committed.notify_all()
+        self.shard.notify_committed()
         self.join(timeout=60)
 
     def power_loss(self) -> None:
         """Simulated crash: the thread dies wherever it is."""
         self.hard_stop.set()
         self.stop_event.set()
-        with self.log._committed:
-            self.log._committed.notify_all()
+        self.shard.notify_committed()
         self.join(timeout=60)
+
+
+class CleanupPool:
+    """One drain thread per shard, addressed collectively or per shard."""
+
+    def __init__(self, log: NVLog,
+                 resolve_file: Callable[[int], Optional[object]]):
+        self.log = log
+        self.threads = [CleanupThread(log, sh, resolve_file)
+                        for sh in log.shards]
+
+    def start(self) -> None:
+        for t in self.threads:
+            t.start()
+
+    def _targets(self, shards: Optional[Iterable[int]]):
+        if shards is None:
+            return self.threads
+        return [self.threads[s] for s in sorted(set(shards))]
+
+    def request_drain(self, shards: Optional[Iterable[int]] = None) -> None:
+        for t in self._targets(shards):
+            t.request_drain()
+
+    def end_drain(self, shards: Optional[Iterable[int]] = None) -> None:
+        for t in self._targets(shards):
+            t.end_drain()
+
+    def shutdown(self) -> None:
+        for t in self.threads:
+            t.shutdown()
+
+    def power_loss(self) -> None:
+        for t in self.threads:
+            t.hard_stop.set()
+            t.stop_event.set()
+            t.shard.notify_committed()
+        for t in self.threads:
+            t.join(timeout=60)
+
+    # ------------------------------------------------------------- status
+    @property
+    def error(self) -> Optional[BaseException]:
+        for t in self.threads:
+            if t.error is not None:
+                return t.error
+        return None
+
+    @property
+    def stats_batches(self) -> int:
+        return sum(t.stats_batches for t in self.threads)
+
+    @property
+    def stats_entries(self) -> int:
+        return sum(t.stats_entries for t in self.threads)
+
+    @property
+    def stats_fsyncs(self) -> int:
+        return sum(t.stats_fsyncs for t in self.threads)

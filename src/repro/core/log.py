@@ -1,32 +1,50 @@
-"""The NVMM circular write log (paper §II-B, §II-D, §III Algorithm 1).
+"""The NVMM write log (paper §II-B, §II-D, §III Algorithm 1), sharded.
 
 Layout inside the NVMM region::
 
-    [superblock | fd-path table | entry 0 | entry 1 | ... | entry N-1 ]
+    [superblock + shard tail table | fd-path table | shard 0 | ... | shard K-1]
+
+The region is partitioned into ``K = policy.shards`` independent sub-logs
+(*shards*), each a circular array of fixed-size entries with its own
+monotonic indices, its own persistent tail slot in the superblock's shard
+table (one cacheline per shard — no false sharing of tail updates), and its
+own volatile head/tail pair, i.e. free-space accounting.  ``K == 1`` is
+exactly the paper's single circular log.  Writes are routed to a shard by
+(fdid, offset) — see :mod:`repro.core.policy` — so unrelated files never
+contend on the same fetch-and-add and each shard is drained by its own
+cleanup thread (:class:`repro.core.cleanup.CleanupPool`).
 
 Entries are fixed-size (paper §II-D: fixed size is what lets a thread commit
 its entry independently of uncommitted neighbours, and lets recovery skip an
-uncommitted hole and keep scanning).  Each 32-byte entry header packs the
+uncommitted hole and keep scanning).  Each 48-byte entry header packs the
 commit flag and the group index into a single word ``cg`` that lives in the
 first cacheline of the entry (paper: one flush, no extra cache miss):
 
     cg == 0        free, or allocated-but-uncommitted
     cg == 1        committed group head (or single-entry write)
     cg == idx + 2  committed follower of the group whose head has monotonic
-                   index ``idx``
+                   index ``idx`` (indices are per shard)
 
-Indices are monotonic u64; the slot of index ``i`` is ``i % N``.  A write
-larger than one entry allocates a *contiguous* block of entries with a single
-fetch-and-add (a faithful refinement of the paper's per-entry allocation: it
-keeps per-thread commit independence, and makes group extent recoverable via
-the head's follower count).  The group commits atomically through the head's
-commit flag alone (paper §II-D), in this order:
+The header also carries ``seq``, a *global* commit sequence number shared by
+all shards.  ``seq`` is drawn while holding the shard's allocation lock, so
+within one shard log order and seq order agree; across shards ``seq`` is the
+merge key: recovery scans each shard independently and replays the union of
+committed groups in ascending ``seq``, which restores the durable-
+linearizability order per file location (any two overlapping writes are
+routed to the same shard, so their seqs are also ordered by that shard's
+log).  Per-shard indices are monotonic u64; the slot of index ``i`` is
+``i % N`` with ``N = policy.entries_per_shard``.
+
+A write larger than one entry allocates a *contiguous* block of entries in
+one shard with a single fetch-and-add and commits atomically through the
+head's commit flag alone (paper §II-D), in this order:
 
     fill followers -> pwb -> fill head (cg=0) -> pwb -> pfence
     -> head.cg = 1 -> pwb -> psync        (durable linearizability, §III)
 
-Two tails (paper §III "cleanup thread"):
-  * ``persistent_tail`` in NVMM — where recovery starts scanning;
+Two tails per shard (paper §III "cleanup thread"):
+  * ``persistent_tail`` in NVMM (shard table slot) — where recovery starts
+    scanning this shard;
   * ``volatile_tail`` in DRAM — what writers check for free space.  An entry
     is recycled for writers only after it is durably consumed
     (cg zeroed + persistent tail advanced + pwb/pfence).
@@ -36,18 +54,18 @@ from __future__ import annotations
 import struct
 import threading
 import zlib
-from typing import Iterator, Optional
+from typing import Iterator, List, Optional
 
 from repro.core.nvmm import NVMM
 from repro.core.policy import Policy, SUPERBLOCK
 
-MAGIC = 0x4E56_4341_4348_4531  # "NVCACHE1"
-VERSION = 1
+MAGIC = 0x4E56_4341_4348_4532  # "NVCACHE2" (v1 was the unsharded layout)
+VERSION = 2
 
-_SB = struct.Struct("<QII Q Q II")          # magic, ver, entry_size, n, ptail, fd_max, path_max
-_HDR = struct.Struct("<QQIIII")             # cg, off, fdid, length, nfollow, crc
-HDR_SIZE = _HDR.size                        # 32
-assert HDR_SIZE == 32
+_SB = struct.Struct("<QIIIIII")   # magic, ver, entry_size, entries/shard, shards, fd_max, path_max
+_HDR = struct.Struct("<QQQIIII")  # cg, seq, off, fdid, length, nfollow, crc
+HDR_SIZE = 48                     # header struct (44B) padded to 48
+assert _HDR.size <= HDR_SIZE
 
 CG_FREE = 0
 CG_HEAD = 1
@@ -60,11 +78,14 @@ class LogFullTimeout(RuntimeError):
 class Entry:
     """Decoded view of a committed entry (header + payload memoryview)."""
 
-    __slots__ = ("idx", "cg", "off", "fdid", "length", "nfollow", "crc", "data")
+    __slots__ = ("sid", "idx", "cg", "seq", "off", "fdid", "length", "nfollow",
+                 "crc", "data")
 
-    def __init__(self, idx, cg, off, fdid, length, nfollow, crc, data):
+    def __init__(self, sid, idx, cg, seq, off, fdid, length, nfollow, crc, data):
+        self.sid = sid
         self.idx = idx
         self.cg = cg
+        self.seq = seq
         self.off = off
         self.fdid = fdid
         self.length = length
@@ -73,78 +94,54 @@ class Entry:
         self.data = data  # memoryview of length bytes (valid until recycled)
 
 
-class NVLog:
-    def __init__(self, nvmm: NVMM, policy: Policy, *, format: bool = True):
+class LogShard:
+    """One independent circular sub-log (the paper's whole log when K=1)."""
+
+    def __init__(self, nvmm: NVMM, policy: Policy, sid: int):
         self.nvmm = nvmm
         self.policy = policy
-        self.n = policy.log_entries
+        self.sid = sid
+        self.n = policy.entries_per_shard
         self.entry_size = policy.entry_size
-        self.base = policy.entries_base
-        if nvmm.size < policy.nvmm_bytes:
-            raise ValueError(f"NVMM region too small: {nvmm.size} < {policy.nvmm_bytes}")
+        self.base = policy.shard_base(sid)
+        self.tail_off = policy.shard_tail_off(sid)
 
         self._lock = threading.Lock()           # guards head/volatile_tail
         self._space = threading.Condition(self._lock)   # writers wait for space
-        self._committed = threading.Condition(self._lock)  # cleanup waits for work
+        self._committed = threading.Condition(self._lock)  # drainer waits for work
+        self.head = 0                           # volatile head (paper §II-B fn1)
+        self.volatile_tail = 0
 
-        if format:
-            self._format()
-            self.head = 0                       # volatile head (paper §II-B fn1)
-            self.volatile_tail = 0
-        else:
-            self._check_superblock()
-            ptail = self.persistent_tail
-            # after restart the only safe head is derived by recovery; until
-            # then treat log as starting where recovery left it.
-            self.head = ptail
-            self.volatile_tail = ptail
-
-    # ------------------------------------------------------------ superblock
-    def _format(self) -> None:
-        self.nvmm.store(0, b"\x00" * self.policy.entries_base)
-        self.nvmm.store(0, _SB.pack(MAGIC, VERSION, self.entry_size, self.n, 0,
-                                    self.policy.fd_max, self.policy.path_max))
-        # zero every entry header so cg == CG_FREE everywhere
+    def format(self) -> None:
+        """Zero every entry header (cg == CG_FREE) and this shard's tail."""
         for i in range(self.n):
             self.nvmm.store(self.base + i * self.entry_size, b"\x00" * HDR_SIZE)
-        self.nvmm.pwb(0, self.policy.entries_base)
-        self.nvmm.psync()
+            self.nvmm.pwb(self.base + i * self.entry_size, HDR_SIZE)
+        self.nvmm.store_u64(self.tail_off, 0)
+        self.nvmm.pwb(self.tail_off, 8)
+        self.head = 0
+        self.volatile_tail = 0
 
-    def _check_superblock(self) -> None:
-        magic, ver, esz, n, _pt, fdm, pm = _SB.unpack_from(self.nvmm.load(0, _SB.size))
-        if magic != MAGIC or ver != VERSION:
-            raise ValueError("not an NVCache log region")
-        if esz != self.entry_size or n != self.n:
-            raise ValueError("policy mismatch with on-NVMM superblock")
+    def attach(self) -> int:
+        """Adopt on-NVMM state after a restart; returns the max committed seq
+        seen (0 if the shard is empty)."""
+        ptail = self.persistent_tail
+        self.head = ptail
+        self.volatile_tail = ptail
+        max_seq = 0
+        for e in self.scan_committed(ptail, ptail + self.n):
+            max_seq = max(max_seq, e.seq)
+            if e.idx + 1 > self.head:
+                self.head = e.idx + 1
+        return max_seq
 
     @property
     def persistent_tail(self) -> int:
-        return self.nvmm.load_u64(0x18)
+        return self.nvmm.load_u64(self.tail_off)
 
     def _store_persistent_tail(self, val: int) -> None:
-        self.nvmm.store_u64(0x18, val)
-        self.nvmm.pwb(0x18, 8)
-
-    # ------------------------------------------------------------- fd table
-    def fd_table_set(self, fdid: int, path: str) -> None:
-        raw = path.encode()
-        if len(raw) >= self.policy.path_max:
-            raise ValueError("path too long for fd table")
-        off = SUPERBLOCK + fdid * self.policy.path_max
-        self.nvmm.store(off, raw + b"\x00" * (self.policy.path_max - len(raw)))
-        self.nvmm.pwb(off, self.policy.path_max)
-        self.nvmm.psync()
-
-    def fd_table_get(self, fdid: int) -> Optional[str]:
-        off = SUPERBLOCK + fdid * self.policy.path_max
-        raw = bytes(self.nvmm.load(off, self.policy.path_max))
-        raw = raw.split(b"\x00", 1)[0]
-        return raw.decode() if raw else None
-
-    def fd_table_clear(self) -> None:
-        self.nvmm.store(SUPERBLOCK, b"\x00" * self.policy.fd_table_bytes)
-        self.nvmm.pwb(SUPERBLOCK, self.policy.fd_table_bytes)
-        self.nvmm.psync()
+        self.nvmm.store_u64(self.tail_off, val)
+        self.nvmm.pwb(self.tail_off, 8)
 
     # ---------------------------------------------------------- entry codec
     def _eoff(self, idx: int) -> int:
@@ -155,9 +152,10 @@ class NVLog:
 
     def read_entry(self, idx: int) -> Entry:
         off = self._eoff(idx)
-        cg, foff, fdid, length, nfollow, crc = _HDR.unpack_from(self.nvmm.load(off, HDR_SIZE))
+        cg, seq, foff, fdid, length, nfollow, crc = _HDR.unpack_from(
+            self.nvmm.load(off, _HDR.size))
         data = self.nvmm.load(off + HDR_SIZE, length)
-        return Entry(idx, cg, foff, fdid, length, nfollow, crc, data)
+        return Entry(self.sid, idx, cg, seq, foff, fdid, length, nfollow, crc, data)
 
     def is_committed(self, idx: int) -> bool:
         """Committed = head with cg==1, or follower whose head has cg==1."""
@@ -169,61 +167,66 @@ class NVLog:
         return False
 
     # ------------------------------------------------------------ allocation
-    def entries_needed(self, nbytes: int) -> int:
-        return max(1, -(-nbytes // self.policy.entry_data))
+    def alloc(self, k: int, timeout: Optional[float] = None,
+              seq_source=None) -> tuple[int, int]:
+        """Reserve ``k`` contiguous entries; returns (index, seq).
 
-    def alloc(self, k: int, timeout: Optional[float] = None) -> int:
-        """Reserve ``k`` contiguous entries; returns monotonic head index.
-
-        Blocks while the log is full (paper Alg. 1 ``next_entry`` line 37).
+        Blocks while the shard is full (paper Alg. 1 ``next_entry`` line 37).
+        ``seq_source`` is drawn *inside* the allocation lock so that within
+        this shard, allocation order == seq order (drain order and the
+        recovery merge then agree for every pair of entries in one shard).
         """
         if k > self.n - 1:
-            raise ValueError("write exceeds log capacity; split upstream")
+            raise ValueError("write exceeds shard capacity; split upstream")
         with self._space:
             while self.head + k - self.volatile_tail > self.n:
                 if not self._space.wait(timeout=timeout):
-                    raise LogFullTimeout("log full")
+                    raise LogFullTimeout(f"shard {self.sid} full")
             idx = self.head
             self.head += k
-            return idx
+            seq = seq_source() if seq_source is not None else 0
+            return idx, seq
 
-    def try_alloc(self, k: int) -> Optional[int]:
+    def try_alloc(self, k: int, seq_source=None) -> Optional[tuple[int, int]]:
         with self._space:
             if self.head + k - self.volatile_tail > self.n:
                 return None
             idx = self.head
             self.head += k
-            return idx
+            seq = seq_source() if seq_source is not None else 0
+            return idx, seq
 
     # ---------------------------------------------------------------- write
-    def fill_entry(self, idx: int, fdid: int, off: int, data: bytes, cg: int) -> None:
+    def fill_entry(self, idx: int, fdid: int, off: int, data: bytes, cg: int,
+                   seq: int = 0) -> None:
         """Fill one entry (no commit).  ``cg`` is 0 for heads, head+2 for
-        followers; ``nfollow`` is patched on the head by :meth:`commit_group`."""
+        followers; ``nfollow`` is patched on the head before commit."""
         eoff = self._eoff(idx)
         crc = zlib.crc32(data) if self.policy.verify_crc else 0
-        self.nvmm.store(eoff, _HDR.pack(cg, off, fdid, len(data), 0, crc))
+        self.nvmm.store(eoff, _HDR.pack(cg, seq, off, fdid, len(data), 0, crc))
         self.nvmm.store(eoff + HDR_SIZE, data)
         self.nvmm.pwb(eoff, HDR_SIZE + len(data))
 
-    def append(self, fdid: int, off: int, data: bytes,
-               timeout: Optional[float] = None) -> tuple[int, int]:
+    def append(self, fdid: int, off: int, data: bytes, *, seq_source,
+               timeout: Optional[float] = None) -> tuple[int, int, int]:
         """The paper's write-cache append: alloc, fill, commit.
 
-        Returns ``(head_idx, k)``.  On return the write is durable
+        Returns ``(head_idx, k, seq)``.  On return the write is durable
         (synchronous durability) and ordered (durable linearizability).
         """
         ed = self.policy.entry_data
-        k = self.entries_needed(len(data))
-        head = self.alloc(k, timeout=timeout)
+        k = max(1, -(-len(data) // ed))
+        head, seq = self.alloc(k, timeout=timeout, seq_source=seq_source)
         # followers first (paper §II-D: they must be durable before the head
         # commit makes the whole group visible to recovery)
         for j in range(1, k):
             chunk = data[j * ed:(j + 1) * ed]
-            self.fill_entry(head + j, fdid, off + j * ed, chunk, cg=head + 2)
-        self.fill_entry(head, fdid, off, data[:ed], cg=CG_FREE)
+            self.fill_entry(head + j, fdid, off + j * ed, chunk, cg=head + 2,
+                            seq=seq)
+        self.fill_entry(head, fdid, off, data[:ed], cg=CG_FREE, seq=seq)
         # patch nfollow on the head before the commit flush
         eoff = self._eoff(head)
-        self.nvmm.store(eoff + 0x18, struct.pack("<I", k - 1))
+        self.nvmm.store(eoff + 32, struct.pack("<I", k - 1))
         self.nvmm.pwb(eoff, HDR_SIZE)
         self.nvmm.pfence()                    # entries durable before commit
         self.nvmm.store_u64(eoff, CG_HEAD)    # commit the group
@@ -231,13 +234,13 @@ class NVLog:
         self.nvmm.psync()                     # durable linearizability (§III)
         with self._lock:
             self._committed.notify_all()
-        return head, k
+        return head, k, seq
 
-    # -------------------------------------------------- consumption (cleanup)
+    # -------------------------------------------------- consumption (drain)
     def committed_run(self, start: int, limit: int) -> int:
         """Number of consecutive committed entries at ``start`` (whole groups
-        only), capped at ``limit``.  Used by the cleanup thread to build a
-        batch; stops at the first uncommitted head (in-flight write)."""
+        only), capped at ``limit``.  Used by this shard's drain thread to
+        build a batch; stops at the first uncommitted head (in-flight)."""
         count = 0
         with self._lock:
             head = self.head
@@ -273,7 +276,7 @@ class NVLog:
         recycle the slots.
         """
         if start != self.persistent_tail:
-            raise AssertionError("cleanup must consume at the persistent tail")
+            raise AssertionError("drain must consume at the persistent tail")
         for i in range(count):
             eoff = self._eoff(start + i)
             self.nvmm.store_u64(eoff, CG_FREE)
@@ -286,10 +289,10 @@ class NVLog:
 
     # ------------------------------------------------------------------ scan
     def scan_committed(self, start: int, end: int) -> Iterator[Entry]:
-        """Yield committed entries in ``[start, end)`` in log order, skipping
-        holes.  Safe concurrently with writers (an entry is only yielded when
-        its group head is committed) — used by the dirty-miss procedure and by
-        recovery."""
+        """Yield committed entries in ``[start, end)`` in shard-log order,
+        skipping holes.  Safe concurrently with writers (an entry is only
+        yielded when its group head is committed) — used by the dirty-miss
+        procedure and by recovery."""
         idx = start
         while idx < end:
             cg = self.read_cg(idx)
@@ -313,5 +316,126 @@ class NVLog:
         with self._lock:
             return self.head - self.volatile_tail
 
+    def notify_committed(self) -> None:
+        with self._committed:
+            self._committed.notify_all()
+
+
+class NVLog:
+    """The sharded log facade: K :class:`LogShard` sub-logs, the global
+    superblock + fd-path table, the global ``seq`` source, and write routing.
+    """
+
+    def __init__(self, nvmm: NVMM, policy: Policy, *, format: bool = True,
+                 adopt: bool = True):
+        """``adopt=False`` (with ``format=False``) skips restoring the
+        volatile heads/seq from a scan — for read-only consumers like
+        recovery, which scans the shards itself anyway."""
+        self.nvmm = nvmm
+        self.policy = policy
+        self.n = policy.entries_per_shard
+        self.entry_size = policy.entry_size
+        if nvmm.size < policy.nvmm_bytes:
+            raise ValueError(f"NVMM region too small: {nvmm.size} < {policy.nvmm_bytes}")
+        self.shards: List[LogShard] = [LogShard(nvmm, policy, s)
+                                       for s in range(policy.shards)]
+        self._seq_lock = threading.Lock()
+        self._seq = 0
+        if format:
+            self._format()
+        else:
+            self._check_superblock()
+            if adopt:
+                self._seq = max(sh.attach() for sh in self.shards)
+
+    def next_seq(self) -> int:
+        with self._seq_lock:
+            self._seq += 1
+            return self._seq
+
+    # ------------------------------------------------------------ superblock
+    def _format(self) -> None:
+        self.nvmm.store(0, b"\x00" * self.policy.entries_base)
+        self.nvmm.store(0, _SB.pack(MAGIC, VERSION, self.entry_size, self.n,
+                                    self.policy.shards, self.policy.fd_max,
+                                    self.policy.path_max))
+        self.nvmm.pwb(0, self.policy.entries_base)
+        for sh in self.shards:
+            sh.format()
+        self.nvmm.psync()
+        self._seq = 0
+
+    def _check_superblock(self) -> None:
+        magic, ver, esz, n, k, fdm, pm = _SB.unpack_from(self.nvmm.load(0, _SB.size))
+        if magic != MAGIC or ver != VERSION:
+            raise ValueError("not an NVCache log region")
+        if esz != self.entry_size or n != self.n or k != self.policy.shards:
+            raise ValueError("policy mismatch with on-NVMM superblock")
+
+    # ------------------------------------------------------------- fd table
+    def fd_table_set(self, fdid: int, path: str) -> None:
+        raw = path.encode()
+        if len(raw) >= self.policy.path_max:
+            raise ValueError("path too long for fd table")
+        off = SUPERBLOCK + fdid * self.policy.path_max
+        self.nvmm.store(off, raw + b"\x00" * (self.policy.path_max - len(raw)))
+        self.nvmm.pwb(off, self.policy.path_max)
+        self.nvmm.psync()
+
+    def fd_table_get(self, fdid: int) -> Optional[str]:
+        off = SUPERBLOCK + fdid * self.policy.path_max
+        raw = bytes(self.nvmm.load(off, self.policy.path_max))
+        raw = raw.split(b"\x00", 1)[0]
+        return raw.decode() if raw else None
+
+    def fd_table_clear(self) -> None:
+        self.nvmm.store(SUPERBLOCK, b"\x00" * self.policy.fd_table_bytes)
+        self.nvmm.pwb(SUPERBLOCK, self.policy.fd_table_bytes)
+        self.nvmm.psync()
+
+    # --------------------------------------------------------------- routing
+    def route(self, fdid: int, off: int) -> int:
+        """Map a write to a shard.  Overlapping writes always map to the same
+        shard (per-file in "fdid" mode, per-stripe in "stripe" mode, where the
+        caller splits writes at stripe boundaries)."""
+        k = self.policy.shards
+        if k == 1:
+            return 0
+        if self.policy.shard_route == "fdid":
+            return fdid % k
+        return (fdid + off // self.policy.stripe_bytes) % k
+
+    def entries_needed(self, nbytes: int) -> int:
+        return max(1, -(-nbytes // self.policy.entry_data))
+
+    # ---------------------------------------------------------------- write
+    def append(self, fdid: int, off: int, data: bytes,
+               timeout: Optional[float] = None,
+               shard: Optional[int] = None) -> tuple[int, int, int]:
+        """Route and commit one write; returns ``(sid, head_idx, k)``."""
+        sid = self.route(fdid, off) if shard is None else shard
+        head, k, _seq = self.shards[sid].append(fdid, off, data,
+                                                seq_source=self.next_seq,
+                                                timeout=timeout)
+        return sid, head, k
+
+    # ------------------------------------------------------------------ scan
+    def scan_all_committed(self) -> Iterator[Entry]:
+        """Committed entries of every shard, in no particular cross-shard
+        order (sort by ``(seq, idx)`` when ordering matters)."""
+        for sh in self.shards:
+            tail, head = sh.snapshot_bounds()
+            yield from sh.scan_committed(tail, head)
+
+    @property
+    def used_entries(self) -> int:
+        return sum(sh.used_entries for sh in self.shards)
+
     def verify_entry(self, e: Entry) -> bool:
         return (not self.policy.verify_crc) or zlib.crc32(bytes(e.data)) == e.crc
+
+    # --------------------------------------------- single-shard conveniences
+    # (protocol-level tests and the K=1 path address the log as one object)
+    @property
+    def persistent_tail(self) -> int:
+        return self.shards[0].persistent_tail

@@ -2,6 +2,20 @@
 
 Paper defaults: 4 KiB entries, 16 Mi entries (~64 GiB log), 250k-page read
 cache (~1 GiB), cleanup batches of [1000, 10000] entries.
+
+Beyond the paper: the log can be partitioned into ``shards`` independent
+sub-logs (cf. "NVMM cache design: Logging vs. Paging" and NVLog's per-core
+logs), each with its own commit path, persistent tail and drain thread.
+``shard_route`` picks how writes map to shards:
+
+* ``"fdid"``   — strict per-file affinity: shard = fdid % K.  Unrelated
+  files never contend on the same fetch-and-add; all writes of one file
+  stay totally ordered by one shard's log.
+* ``"stripe"`` — per-file *stripe* affinity (the sound version of
+  "round-robin for a hot fd"): shard = (fdid + off // stripe_bytes) % K.
+  A hot file spreads across every shard, while any two overlapping writes
+  still land in the same shard (writes are split at stripe boundaries
+  upstream), which keeps per-location ordering a single-log property.
 """
 from __future__ import annotations
 
@@ -12,10 +26,12 @@ MIB = 1024 * KIB
 GIB = 1024 * MIB
 
 CACHELINE = 64
-ENTRY_HEADER = 32
+ENTRY_HEADER = 48
 PATH_MAX = 256
 FD_MAX = 256
-SUPERBLOCK = 4096  # superblock + fd table live in the first region of NVMM
+SUPERBLOCK = 4096  # superblock + shard tail table live in the first region
+SHARD_TAILS = 64   # per-shard persistent tails start here, one cacheline each
+MAX_SHARDS = (SUPERBLOCK - SHARD_TAILS) // CACHELINE
 
 
 @dataclasses.dataclass(frozen=True)
@@ -23,7 +39,7 @@ class Policy:
     """Configuration of one NVCache instance."""
 
     entry_size: int = 4 * KIB          # fixed-size log entries (paper §II-D)
-    log_entries: int = 16 * 1024       # paper: 16 Mi; tests/benches scale down
+    log_entries: int = 16 * 1024       # total across shards; paper: 16 Mi
     page_size: int = 4 * KIB           # read-cache page (power of two, §II-C fn2)
     read_cache_pages: int = 1024       # paper: 250k pages (~1 GiB)
     batch_min: int = 1000              # min entries before cleanup batches (§IV-A)
@@ -31,17 +47,29 @@ class Policy:
     verify_crc: bool = True            # beyond-paper: per-entry payload CRC32
     fd_max: int = FD_MAX
     path_max: int = PATH_MAX
+    shards: int = 1                    # independent sub-logs (1 == paper design)
+    shard_route: str = "stripe"        # "stripe" | "fdid" (see module docstring)
+    stripe_pages: int = 64             # stripe width, in read-cache pages
 
     def __post_init__(self):
         if self.page_size & (self.page_size - 1):
             raise ValueError("page_size must be a power of two (radix tree)")
         if self.entry_size <= ENTRY_HEADER:
-            raise ValueError("entry_size must exceed the 32-byte header")
-        if self.log_entries < 2:
-            raise ValueError("log needs at least 2 entries")
-        # a batch larger than the log can never fill: clamp (paper's config
+            raise ValueError(f"entry_size must exceed the {ENTRY_HEADER}-byte header")
+        if not 1 <= self.shards <= MAX_SHARDS:
+            raise ValueError(f"shards must be in [1, {MAX_SHARDS}]")
+        if self.shard_route not in ("stripe", "fdid"):
+            raise ValueError("shard_route must be 'stripe' or 'fdid'")
+        if self.stripe_pages < 1:
+            raise ValueError("stripe_pages must be >= 1")
+        per = self.log_entries // self.shards
+        if per < 2:
+            raise ValueError("each shard needs at least 2 entries")
+        # normalize: the layout carves equal shards out of the region
+        object.__setattr__(self, "log_entries", per * self.shards)
+        # a batch larger than a shard can never fill: clamp (paper's config
         # always has batch << log; this guards scaled-down test configs)
-        cap = max(1, self.log_entries // 2)
+        cap = max(1, per // 2)
         if self.batch_min > cap:
             object.__setattr__(self, "batch_min", cap)
         if self.batch_max < self.batch_min:
@@ -52,6 +80,14 @@ class Policy:
         return self.entry_size - ENTRY_HEADER
 
     @property
+    def entries_per_shard(self) -> int:
+        return self.log_entries // self.shards
+
+    @property
+    def stripe_bytes(self) -> int:
+        return self.stripe_pages * self.page_size
+
+    @property
     def fd_table_bytes(self) -> int:
         return self.fd_max * self.path_max
 
@@ -59,6 +95,12 @@ class Policy:
     def entries_base(self) -> int:
         base = SUPERBLOCK + self.fd_table_bytes
         return (base + self.page_size - 1) & ~(self.page_size - 1)
+
+    def shard_base(self, sid: int) -> int:
+        return self.entries_base + sid * self.entries_per_shard * self.entry_size
+
+    def shard_tail_off(self, sid: int) -> int:
+        return SHARD_TAILS + sid * CACHELINE
 
     @property
     def nvmm_bytes(self) -> int:

@@ -94,6 +94,10 @@ class RadixTree:
         return node  # type: ignore[return-value]
 
     def get_or_create(self, key: int) -> PageDesc:
+        if key < 0:
+            # a negative key would right-shift to -1 forever and grow the
+            # tree without bound; offsets are validated upstream (EINVAL)
+            raise ValueError(f"negative page number {key}")
         found = self.get(key)
         if found is not None:
             return found

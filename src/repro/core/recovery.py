@@ -1,17 +1,23 @@
-"""Recovery procedure (paper §III "Recovery procedure").
+"""Recovery procedure (paper §III "Recovery procedure"), sharded.
 
 On restart after a crash: re-open the files listed in the NVMM fd-path
-table, replay every committed log entry in log order starting at the
-persistent tail, ``sync`` the backends, then empty the log and clear the
-table.  Uncommitted holes are skipped — possible because entries are
-fixed-size (paper §II-D).
+table, scan *each shard* independently for committed entry groups starting
+at that shard's persistent tail (uncommitted holes are skipped — possible
+because entries are fixed-size, paper §II-D), then **merge the groups of
+all shards by their global commit sequence number** and replay them in that
+order, ``sync`` the backends, empty the log and clear the table.
+
+The seq-merge is what preserves durable linearizability across shards: any
+two overlapping writes were routed to the same shard (so their seqs are
+ordered by that shard's log), and replaying the union in ascending seq
+therefore applies every file location's writes in commit order.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, List
 
-from repro.core.log import NVLog
+from repro.core.log import CG_HEAD, Entry, NVLog
 from repro.core.nvmm import NVMM
 from repro.core.policy import Policy
 
@@ -23,6 +29,8 @@ class RecoveryStats:
     holes_skipped: int = 0
     crc_failures: int = 0
     files: int = 0
+    shards: int = 1
+    groups_merged: int = 0
 
 
 def recover(nvmm: NVMM, policy: Policy,
@@ -32,28 +40,45 @@ def recover(nvmm: NVMM, policy: Policy,
     ``open_backend(path)`` must return a backend file object with
     ``pwrite(data, off)``, ``fsync()`` and ``close()``.
     """
-    log = NVLog(nvmm, policy, format=False)
-    stats = RecoveryStats()
-    ptail = log.persistent_tail
-    files: dict[str, object] = {}
+    log = NVLog(nvmm, policy, format=False, adopt=False)
+    stats = RecoveryStats(shards=policy.shards)
 
+    # phase 1: scan each shard independently, collecting committed groups
+    # (head entry + its committed followers) in shard-log order.
+    groups: List[tuple[int, int, List[Entry]]] = []   # (seq, sid, entries)
     seen = 0
-    for e in log.scan_committed(ptail, ptail + log.n):
-        seen += 1
-        if not log.verify_entry(e):
-            stats.crc_failures += 1
-            continue
-        path = log.fd_table_get(e.fdid)
-        if path is None:
-            continue  # orphan entry: its file slot was already retired
-        f = files.get(path)
-        if f is None:
-            f = open_backend(path)
-            files[path] = f
-        f.pwrite(bytes(e.data), e.off)
-        stats.entries_replayed += 1
-        stats.bytes_replayed += e.length
-    stats.holes_skipped = log.n - seen if seen <= log.n else 0
+    for sh in log.shards:
+        ptail = sh.persistent_tail
+        cur: List[Entry] | None = None
+        for e in sh.scan_committed(ptail, ptail + sh.n):
+            seen += 1
+            if e.cg == CG_HEAD:
+                cur = [e]
+                groups.append((e.seq, sh.sid, cur))
+            elif cur is not None:
+                cur.append(e)
+    total = log.n * policy.shards
+    stats.holes_skipped = total - seen if seen <= total else 0
+
+    # phase 2: merge by global commit sequence and replay in that order.
+    groups.sort(key=lambda g: (g[0], g[1]))
+    stats.groups_merged = len(groups)
+    files: dict[str, object] = {}
+    for _seq, _sid, entries in groups:
+        for e in entries:
+            if not log.verify_entry(e):
+                stats.crc_failures += 1
+                continue
+            path = log.fd_table_get(e.fdid)
+            if path is None:
+                continue  # orphan entry: its file slot was already retired
+            f = files.get(path)
+            if f is None:
+                f = open_backend(path)
+                files[path] = f
+            f.pwrite(bytes(e.data), e.off)
+            stats.entries_replayed += 1
+            stats.bytes_replayed += e.length
 
     for f in files.values():
         f.fsync()

@@ -1,0 +1,145 @@
+"""Dependency-free stand-in for the subset of `hypothesis` these tests use.
+
+The container may not ship `hypothesis`; rather than skip the crash-
+consistency and POSIX-model property tests (they are the tier-1 safety
+net), we fall back to this minimal clone: deterministic seeded random
+generation, `max_examples` iterations, no shrinking.  Failures re-raise
+with the falsifying example attached.  When the real hypothesis is
+installed the test modules import it instead and none of this is used.
+"""
+from __future__ import annotations
+
+
+import os
+import random
+import zlib
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+
+class _Strategy:
+    __slots__ = ("_draw",)
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class _DataStrategy:
+    """Marker for `st.data()`; `given` resolves it to a `_Data` object."""
+
+
+class _Data:
+    """Interactive draws inside the test body (`data.draw(strategy)`)."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy, label: str | None = None):
+        return strategy.draw(self._rng)
+
+
+class strategies:
+    """Namespace mirroring `hypothesis.strategies` (the used subset)."""
+
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 1 << 30) -> _Strategy:
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def binary(*, min_size: int = 0, max_size: int = 64) -> _Strategy:
+        return _Strategy(lambda r: r.randbytes(r.randint(min_size, max_size)))
+
+    @staticmethod
+    def just(value) -> _Strategy:
+        return _Strategy(lambda r: value)
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        seq = list(seq)
+        return _Strategy(lambda r: r.choice(seq))
+
+    @staticmethod
+    def one_of(*strats) -> _Strategy:
+        if len(strats) == 1 and isinstance(strats[0], (list, tuple)):
+            strats = tuple(strats[0])
+        return _Strategy(lambda r: r.choice(strats).draw(r))
+
+    @staticmethod
+    def tuples(*strats) -> _Strategy:
+        return _Strategy(lambda r: tuple(s.draw(r) for s in strats))
+
+    @staticmethod
+    def lists(elem: _Strategy, *, min_size: int = 0, max_size: int = 10) -> _Strategy:
+        return _Strategy(
+            lambda r: [elem.draw(r) for _ in range(r.randint(min_size, max_size))])
+
+    @staticmethod
+    def sets(elem: _Strategy, *, min_size: int = 0, max_size: int = 10) -> _Strategy:
+        def draw(r: random.Random):
+            want = r.randint(min_size, max_size)
+            out: set = set()
+            for _ in range(want * 4 + 4):
+                if len(out) >= want:
+                    break
+                out.add(elem.draw(r))
+            return out
+        return _Strategy(draw)
+
+    @staticmethod
+    def nothing() -> _Strategy:
+        def draw(_r):
+            raise AssertionError("nothing() must never be drawn from")
+        return _Strategy(draw)
+
+    @staticmethod
+    def data() -> _DataStrategy:
+        return _DataStrategy()
+
+
+def settings(max_examples: int = 100, deadline=None, suppress_health_check=()):
+    def deco(fn):
+        fn._pc_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategy_kwargs):
+    def deco(fn):
+        # NOTE: no functools.wraps — pytest would introspect __wrapped__ and
+        # mistake the strategy parameters for fixtures.
+        def run(*args, **kwargs):
+            n = getattr(run, "_pc_max_examples", 100)
+            base = zlib.crc32(fn.__qualname__.encode())
+            base ^= int(os.environ.get("PROPCHECK_SEED", "0"))
+            for i in range(n):
+                rng = random.Random(base * 1_000_003 + i)
+                drawn = {}
+                for name, strat in strategy_kwargs.items():
+                    if isinstance(strat, _DataStrategy):
+                        drawn[name] = _Data(rng)
+                    else:
+                        drawn[name] = strat.draw(rng)
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as exc:
+                    shown = {k: v for k, v in drawn.items()
+                             if not isinstance(v, _Data)}
+                    msg = repr(shown)
+                    if len(msg) > 600:
+                        msg = msg[:600] + "..."
+                    raise AssertionError(
+                        f"falsifying example #{i} of {fn.__qualname__}: {msg}"
+                    ) from exc
+        run.__name__ = fn.__name__
+        run.__qualname__ = fn.__qualname__
+        run.__doc__ = fn.__doc__
+        run.__module__ = fn.__module__
+        return run
+    return deco

@@ -1,0 +1,25 @@
+"""Shared pytest configuration: the `slow` marker and its opt-in flag.
+
+Slow tests (multi-minute pjit / pipeline runs) are skipped by default and
+enabled with ``--runslow``; CI runs the default (fast) selection.
+"""
+import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption("--runslow", action="store_true", default=False,
+                     help="also run tests marked @pytest.mark.slow")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running test, excluded by default (use --runslow)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow test: pass --runslow to run")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)

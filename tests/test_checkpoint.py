@@ -101,6 +101,45 @@ def test_int8_checkpoint_error_bounded():
     assert got["opt"]["step"] == 3
 
 
+requires_zstd = pytest.mark.skipif(
+    codec.zstandard is None, reason="optional dependency `zstandard` not installed")
+
+
+@requires_zstd
+def test_zstd_payloads_roundtrip():
+    """With zstandard installed, compressed records use it (not the zlib
+    fallback) and round-trip exactly."""
+    fs = TierFS(Tier(DRAM))
+    w = codec.Writer(fs, "/z.ckpt", encoding=codec.ENC_ZSTD)
+    arr = np.arange(8192, dtype=np.float32).reshape(64, 128)
+    w.put_leaf("a", arr)
+    w.finish()
+    r = codec.Reader(fs, "/z.ckpt")
+    assert all(e[0] == "a" for e in r.index)
+    assert np.array_equal(r.read_leaf("a"), arr)
+
+
+def test_zlib_fallback_roundtrip():
+    """Force the zlib path (as on hosts without zstandard): records are
+    tagged ENC_ZLIB / zc=1 and decode without zstd."""
+    real = codec.zstandard
+    codec.zstandard = None
+    try:
+        fs = TierFS(Tier(DRAM))
+        w = codec.Writer(fs, "/zl.ckpt", encoding=codec.ENC_ZSTD)
+        arr = np.arange(4096, dtype=np.float32)
+        w.put_leaf("a", arr)
+        w.finish()
+        wq = codec.Writer(fs, "/q.ckpt", encoding=codec.ENC_INT8)
+        wq.put_leaf("a", arr)
+        wq.finish()
+        assert np.array_equal(codec.Reader(fs, "/zl.ckpt").read_leaf("a"), arr)
+        got = codec.Reader(fs, "/q.ckpt").read_leaf("a")
+        assert np.abs(got - arr).max() <= np.abs(arr).max() / 127 + 1e-6
+    finally:
+        codec.zstandard = real
+
+
 def test_gc_keeps_last_k():
     fs = TierFS(Tier(DRAM))
     mgr = CheckpointManager(fs, keep=2)

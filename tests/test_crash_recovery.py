@@ -14,7 +14,11 @@ persistence domain.  The properties:
 import os
 
 import pytest
-from hypothesis import HealthCheck, given, settings, strategies as st
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+except ImportError:                      # container without hypothesis
+    from _propcheck import HealthCheck, given, settings, strategies as st
 
 from repro.core import NVCache, NVMM, Policy, recover
 from repro.core.log import NVLog
@@ -78,12 +82,14 @@ def test_p2_uncommitted_group_never_partially_recovered(presize, torn_off, torn)
     if presize:
         log.append(0, 0, b"\x11" * presize)           # committed baseline
     # torn write: followers + head filled and flushed, but NO commit flag
+    sh = log.shards[0]
     ed = POL.entry_data
     k = log.entries_needed(len(torn))
-    head = log.alloc(k)
+    head, seq = sh.alloc(k, seq_source=log.next_seq)
     for j in range(1, k):
-        log.fill_entry(head + j, 0, torn_off + j * ed, torn[j * ed:(j + 1) * ed], cg=head + 2)
-    log.fill_entry(head, 0, torn_off, torn[:ed], cg=0)
+        sh.fill_entry(head + j, 0, torn_off + j * ed, torn[j * ed:(j + 1) * ed],
+                      cg=head + 2, seq=seq)
+    sh.fill_entry(head, 0, torn_off, torn[:ed], cg=0, seq=seq)
     nvmm.pfence()
     nvmm.crash()                                       # nothing else evicted
     stats = recover(nvmm, POL, tier.open)

@@ -2,7 +2,10 @@
 behave exactly like an in-memory reference file (hypothesis-driven)."""
 import os
 
-from hypothesis import HealthCheck, given, settings, strategies as st
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+except ImportError:                      # container without hypothesis
+    from _propcheck import HealthCheck, given, settings, strategies as st
 
 from repro.core import NVCache, Policy
 from repro.storage.tiers import DRAM, Tier
@@ -40,11 +43,14 @@ class RefFile:
 
     def seek(self, off, whence):
         if whence == os.SEEK_SET:
-            self.cursor = off
+            target = off
         elif whence == os.SEEK_CUR:
-            self.cursor += off
+            target = self.cursor + off
         else:
-            self.cursor = len(self.data) + off
+            target = len(self.data) + off
+        if target < 0:
+            raise OSError("negative seek (EINVAL)")   # cursor unchanged
+        self.cursor = target
         return self.cursor
 
 
@@ -84,8 +90,15 @@ def test_nvcache_matches_posix_reference(ops):
                 assert nv.read(fd, op[1]) == ref.read(op[1]), op
             elif op[0] == "seek":
                 _, off, whence = op
-                if whence == os.SEEK_CUR or off >= 0:
-                    assert nv.lseek(fd, off, whence) == ref.seek(off, whence)
+                try:
+                    got = nv.lseek(fd, off, whence)
+                except OSError:
+                    got = "EINVAL"
+                try:
+                    want = ref.seek(off, whence)
+                except OSError:
+                    want = "EINVAL"
+                assert got == want, op
             elif op[0] == "size":
                 assert nv.stat_size(fd) == len(ref.data)
             elif op[0] == "flush":
