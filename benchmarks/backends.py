@@ -25,11 +25,13 @@ NOVA = dataclasses.replace(tiers.NVMM_OPTANE, name="nova",
 
 
 def policy(log_mib: float, *, entry=4096, batch_min=1000, batch_max=10000,
-           read_pages=1024, shards=1, shard_route="stripe") -> Policy:
+           read_pages=1024, shards=1, shard_route="stripe",
+           drain_coalesce=True, fsync_epoch=True) -> Policy:
     return Policy(entry_size=entry, log_entries=max(8 * shards, int(log_mib * 1024 * 1024 // entry)),
                   page_size=4096, read_cache_pages=read_pages,
                   batch_min=batch_min, batch_max=batch_max, verify_crc=False,
-                  shards=shards, shard_route=shard_route)
+                  shards=shards, shard_route=shard_route,
+                  drain_coalesce=drain_coalesce, fsync_epoch=fsync_epoch)
 
 
 @dataclasses.dataclass
@@ -49,18 +51,23 @@ class Stack:
 
 def make_stack(name: str, *, log_mib: float = 64, batch_min=1000,
                batch_max=10000, read_pages=1024, scale: float = SCALE,
-               shards: int = 1, shard_route: str = "stripe") -> Stack:
+               shards: int = 1, shard_route: str = "stripe",
+               drain_coalesce: bool = True, fsync_epoch: bool = True) -> Stack:
     if name == "nvcache+ssd":
         tier = tiers.Tier(tiers.SSD_SATA, sync=False, scale=scale)
         nv = NVCache(policy(log_mib, batch_min=batch_min, batch_max=batch_max,
                             read_pages=read_pages, shards=shards,
-                            shard_route=shard_route), tier)
+                            shard_route=shard_route,
+                            drain_coalesce=drain_coalesce,
+                            fsync_epoch=fsync_epoch), tier)
         return Stack(name, NVCacheFS(nv), nv, tier)
     if name == "nvcache+nova":
         tier = tiers.Tier(NOVA, sync=False, scale=scale)
         nv = NVCache(policy(log_mib, batch_min=batch_min, batch_max=batch_max,
                             read_pages=read_pages, shards=shards,
-                            shard_route=shard_route), tier)
+                            shard_route=shard_route,
+                            drain_coalesce=drain_coalesce,
+                            fsync_epoch=fsync_epoch), tier)
         return Stack(name, NVCacheFS(nv), nv, tier)
     if name == "dm-writecache":
         tier = tiers.DMWriteCacheTier(scale=scale)

@@ -54,18 +54,15 @@ def random_write(fs, *, total_mib: float, file_mib: float, bs: int = 4096,
     }
 
 
-def concurrent_random_write(fs, *, threads: int = 4, total_mib: float,
-                            file_mib: float, bs: int = 4096,
-                            interval_s: float = 0.05,
-                            path_tmpl: str = "/fio{t}.dat", seed: int = 11):
-    """N writer threads, one file per thread (fio numjobs=N), synchronous
-    durability on every op.  The returned ``mib_per_s`` is *committed-write*
+def _concurrent_write(fs, *, threads: int, total_mib: float, bs: int,
+                      interval_s: float, path_tmpl: str, make_offsets):
+    """Shared N-writer engine (fio numjobs=N), synchronous durability on
+    every op.  ``make_offsets(t)`` returns the per-thread ``i -> offset``
+    access pattern.  The returned ``mib_per_s`` is *committed-write*
     throughput: a pwrite only returns once its group is durable, so bytes
-    written per wall second == bytes committed per second.
-    """
+    written per wall second == bytes committed per second."""
     n_ops = int(total_mib * (1 << 20)) // bs
     per_thread = max(1, n_ops // threads)
-    n_slots = max(1, int(file_mib * (1 << 20)) // bs // threads)
     buf = b"x" * bs
     done = [0] * threads
     lat = [0.0] * threads
@@ -73,9 +70,9 @@ def concurrent_random_write(fs, *, threads: int = 4, total_mib: float,
 
     def worker(t):
         fd = fs.open(path_tmpl.format(t=t))
-        rng = np.random.default_rng(seed + t)
+        offset = make_offsets(t)
         for i in range(per_thread):
-            off = int(rng.integers(0, n_slots)) * bs
+            off = offset(i)
             t0 = time.perf_counter()
             fs.pwrite(fd, buf, off)
             fs.fsync(fd)
@@ -114,5 +111,34 @@ def concurrent_random_write(fs, *, threads: int = 4, total_mib: float,
         "avg_lat_us": 1e6 * sum(lat) / max(1, ops),
         "samples": samples,
         "writes": ops,
+        "bytes": ops * bs,
         "threads": threads,
     }
+
+
+def concurrent_seq_write(fs, *, threads: int = 4, total_mib: float,
+                         bs: int = 1024, interval_s: float = 0.05,
+                         path_tmpl: str = "/seq{t}.dat"):
+    """Sequential ``bs``-byte writes, one file per thread — the
+    small-sequential workload where drain-side page/extent coalescing pays
+    (many log entries per backend page, long contiguous runs per batch)."""
+    return _concurrent_write(fs, threads=threads, total_mib=total_mib, bs=bs,
+                             interval_s=interval_s, path_tmpl=path_tmpl,
+                             make_offsets=lambda t: lambda i: i * bs)
+
+
+def concurrent_random_write(fs, *, threads: int = 4, total_mib: float,
+                            file_mib: float, bs: int = 4096,
+                            interval_s: float = 0.05,
+                            path_tmpl: str = "/fio{t}.dat", seed: int = 11):
+    """Random ``bs``-aligned writes over ``file_mib``/threads slots per
+    thread, one file per thread."""
+    n_slots = max(1, int(file_mib * (1 << 20)) // bs // threads)
+
+    def make_offsets(t):
+        rng = np.random.default_rng(seed + t)
+        return lambda i: int(rng.integers(0, n_slots)) * bs
+
+    return _concurrent_write(fs, threads=threads, total_mib=total_mib, bs=bs,
+                             interval_s=interval_s, path_tmpl=path_tmpl,
+                             make_offsets=make_offsets)

@@ -9,6 +9,8 @@ device-time calibration keeps the paper's cross-stack ratios meaningful).
   fig5  log-saturation collapse vs log size               (paper Fig. 5)
   fig6  cleanup batching effect                           (paper Fig. 6)
   fig7  read-cache size insensitivity                     (paper Fig. 7)
+  fig8  drain coalescing vs entry-at-a-time + fsync epoch (beyond paper;
+        machine-readable via benchmarks/run_all.py -> BENCH_pr2.json)
   ckpt  checkpoint-path booster comparison                (beyond paper)
   kern  kernel micro-bench + oracle parity                (framework)
   roofline  per-(arch x shape) terms from dry-run HLO     (see EXPERIMENTS.md)
@@ -23,7 +25,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 def main() -> None:
     which = set(sys.argv[1:]) or {"fig3", "fig4", "fig5", "fig6", "fig7",
-                                  "ckpt", "kern"}
+                                  "fig8", "ckpt", "kern"}
     if "fig3" in which:
         from benchmarks import fig3_dbbench
         fig3_dbbench.run(n_ops=1200)
@@ -39,6 +41,11 @@ def main() -> None:
     if "fig7" in which:
         from benchmarks import fig7_readcache
         fig7_readcache.run(total_mib=6, cache_pages=(8, 128, 4096))
+    if "fig8" in which:
+        from benchmarks import fig8_coalescing
+        fig8_coalescing.run_coalesce_compare(total_mib=4)
+        fig8_coalescing.run_fsync_epoch(total_mib=2)
+        fig8_coalescing.run_dirty_miss(n_pages=64)
     if "ckpt" in which:
         from benchmarks import ckpt_bench
         ckpt_bench.run(mib=16)

@@ -1,0 +1,80 @@
+"""CI entry point: run the PR's headline benchmarks and emit ONE
+machine-readable JSON (``BENCH_pr2.json``) so the perf trajectory of the
+repo is diffable from this PR onward.
+
+    PYTHONPATH=src python benchmarks/run_all.py [--out BENCH_pr2.json] [--quick]
+
+Emitted metrics (schema ``bench_schema: 2``):
+
+* ``committed_mib_s``            — committed-write throughput of the
+  coalescing drain engine on the 4-writer 1 KiB-sequential saturated
+  workload (and ``committed_mib_s_entry_at_a_time`` for the baseline mode);
+* ``page_writes_per_committed_byte`` / ``..._entry_at_a_time`` — backend
+  page writes per committed byte in each mode, plus the reduction factor;
+* ``dirty_miss`` — average dirty-miss read latency and entries inspected
+  per miss (must equal the page's live-entry count: O(E), never O(log)).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import fig8_coalescing  # noqa: E402
+
+
+def run(quick: bool = False) -> dict:
+    total_mib = 4 if quick else 8
+    rows = fig8_coalescing.run_coalesce_compare(total_mib=total_mib)
+    epoch = fig8_coalescing.run_fsync_epoch(total_mib=2 if quick else 4)
+    dm = fig8_coalescing.run_dirty_miss(n_pages=64 if quick else 192)
+    by_mode = {r["mode"]: r for r in rows}
+    entry, coal = by_mode["entry-at-a-time"], by_mode["coalesced"]
+    ppb_entry = entry["backend_page_writes_per_committed_byte"]
+    ppb_coal = coal["backend_page_writes_per_committed_byte"]
+    return {
+        "bench_schema": 2,
+        "pr": 2,
+        "workload": {"threads": coal["threads"], "bs": coal["bs"],
+                     "shards": coal["shards"], "total_mib": total_mib,
+                     "pattern": "sequential", "log_saturated": True},
+        "committed_mib_s": coal["mib_per_s"],
+        "committed_mib_s_entry_at_a_time": entry["mib_per_s"],
+        "throughput_speedup_x": coal["mib_per_s"] / max(1e-9, entry["mib_per_s"]),
+        "page_writes_per_committed_byte": ppb_coal,
+        "page_writes_per_committed_byte_entry_at_a_time": ppb_entry,
+        "page_write_reduction_x": ppb_entry / max(1e-12, ppb_coal),
+        "pwrites_per_committed_byte": coal["backend_pwrites_per_committed_byte"],
+        "pwrites_per_committed_byte_entry_at_a_time":
+            entry["backend_pwrites_per_committed_byte"],
+        "fsync_merge": {"requested": coal["fsyncs_requested"],
+                        "issued": coal["fsyncs_issued"]},
+        "fsync_epoch_hot_file": epoch,
+        "dirty_miss": dm,
+        "detail": rows,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_pr2.json"))
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller workload for CI smoke runs")
+    args = ap.parse_args()
+    result = run(quick=args.quick)
+    with open(args.out, "w") as fh:
+        json.dump(result, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"wrote {args.out}: "
+          f"{result['committed_mib_s']:.1f} MiB/s committed, "
+          f"{result['page_write_reduction_x']:.1f}x fewer backend page "
+          f"writes per committed byte vs entry-at-a-time", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,13 +1,13 @@
 """NVCache core — the paper's contribution (user-space NVMM write-back
 cache with synchronous durability and durable linearizability)."""
 from repro.core.api import NVCache, O_APPEND, O_CREAT, O_RDONLY, O_RDWR, O_TRUNC, O_WRONLY
-from repro.core.log import NVLog
+from repro.core.log import EntryRef, NVLog
 from repro.core.nvmm import NVMM
 from repro.core.policy import PAPER_DEFAULT, TEST_SMALL, Policy
 from repro.core.recovery import RecoveryStats, recover
 
 __all__ = [
-    "NVCache", "NVLog", "NVMM", "Policy", "PAPER_DEFAULT", "TEST_SMALL",
-    "RecoveryStats", "recover",
+    "NVCache", "NVLog", "NVMM", "EntryRef", "Policy", "PAPER_DEFAULT",
+    "TEST_SMALL", "RecoveryStats", "recover",
     "O_RDONLY", "O_WRONLY", "O_RDWR", "O_CREAT", "O_APPEND", "O_TRUNC",
 ]

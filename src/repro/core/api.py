@@ -8,7 +8,8 @@ against libc, and transparently get
     committed in the NVMM log (paper Alg. 1),
   * durable linearizability — a write is visible to a reader only when it
     is durable (the psync before the per-page lock release),
-  * asynchronous propagation to the slow tier via the per-shard drain pool,
+  * asynchronous propagation to the slow tier via the per-shard drain pool
+    and its page-coalescing plan/apply engine (:mod:`repro.core.drain`),
   * ``fsync`` as a no-op (Table III: writes are already durable),
   * user-space file size/cursor (the kernel's may be stale, §II-C).
 
@@ -102,6 +103,7 @@ class NVCache:
         self.cleanup.start()
         self._crashed = False
         self.stats_dirty_misses = 0
+        self.stats_replay_entries = 0   # refs inspected across dirty misses
 
     # ------------------------------------------------------------- lifecycle
     def _resolve_fdid(self, fdid: int) -> Optional[File]:
@@ -232,26 +234,28 @@ class NVCache:
     def _pwrite_op(self, f: File, data: bytes, off: int) -> None:
         """One atomic write op == one committed entry group (Alg. 1)."""
         ps = self.policy.page_size
-        ed = self.policy.entry_data
         n = len(data)
         p0, p1 = off // ps, (off + max(n, 1) - 1) // ps
         descs = [f.radix.get_or_create(p) for p in range(p0, p1 + 1)]
+
+        def register(sid: int, head: int, k: int, seq: int) -> None:
+            # runs between log allocation and commit: the refs are in the
+            # dirty-page index before the drain can possibly see (and try
+            # to retire) the entries.  shard membership likewise becomes
+            # visible before the pending count below can, so a concurrent
+            # close() that sees pending > 0 also sees the shard id.
+            f.shards_touched.add(sid)
+            for ref in self.log.group_refs(sid, head, k, seq, off, n):
+                r1 = (ref.off + max(ref.length, 1) - 1) // ps
+                for p in range(ref.off // ps, r1 + 1):
+                    descs[p - p0].add_ref(ref)
+
         for d in descs:                       # ascending page order: no deadlock
             d.atomic_lock.acquire()
         try:
-            sid, head, k = self.log.append(f.fdid, off, data)  # durable on return
-            # shard membership must be visible before the pending count is:
-            # a concurrent close() that sees pending > 0 must also see the
-            # shard id, or it would drain the wrong subset and time out
-            f.shards_touched.add(sid)
+            sid, head, k, seq = self.log.append(f.fdid, off, data,
+                                                on_alloc=register)  # durable
             f.pending.inc(k)
-            # dirty counters: one tick per (entry, page) overlap — must match
-            # the cleanup thread's per-entry decrements
-            for j in range(k):
-                e_off = off + j * ed
-                e_len = min(ed, n - j * ed)
-                for p in range(e_off // ps, (e_off + max(e_len, 1) - 1) // ps + 1):
-                    descs[p - p0].dirty.inc()
             # update loaded pages so reads stay fresh (Alg. 1 lines 29-31)
             for d in descs:
                 if d.content is not None:
@@ -331,26 +335,24 @@ class NVCache:
             content.data[:len(raw)] = raw
             if len(raw) < ps:
                 content.data[len(raw):] = bytes(ps - len(raw))
-            if d.dirty.get() > 0:
-                # dirty miss: replay committed log entries touching the page
-                # in global commit order — entries may live in several shards,
-                # so collect then sort by (seq, idx) before applying
-                # (idempotent, so entries already propagated but not yet
-                # retired apply harmlessly).
+            refs = d.snapshot_refs()
+            if refs:
+                # dirty miss: replay ONLY this page's live entries from the
+                # dirty-page index, already in commit (seq) order — O(E) for
+                # E entries on the page, where the dirty-counter design had
+                # to rescan the whole log.  All of a page's entries live in
+                # one shard (overlap routing), and holding cleanup_lock
+                # means none of them can be retired/recycled mid-replay, so
+                # ref_payload reads are stable.
                 self.stats_dirty_misses += 1
-                # snapshot payload bytes at collection time: another shard's
-                # drain may recycle (and a writer refill) an entry between
-                # the scan and the sorted apply below
-                hits = [(e.seq, e.idx, e.off, bytes(e.data))
-                        for e in self.log.scan_all_committed()
-                        if e.fdid == f.fdid
-                        and e.off < base + ps and e.off + e.length > base]
-                hits.sort()
-                for _seq, _idx, eoff, edata in hits:
-                    s = max(eoff, base)
-                    t = min(eoff + len(edata), base + ps)
+                self.stats_replay_entries += len(refs)
+                for ref in refs:
+                    edata = self.log.ref_payload(ref)
+                    s = max(ref.off, base)
+                    t = min(ref.off + ref.length, base + ps)
                     if s < t:
-                        content.data[s - base:t - base] = edata[s - eoff:t - eoff]
+                        content.data[s - base:t - base] = \
+                            edata[s - ref.off:t - ref.off]
             self.lru.attach(d, content)
 
     def read(self, fd: int, n: int) -> bytes:
@@ -411,11 +413,17 @@ class NVCache:
             "shards": self.policy.shards,
             "log_used": self.log.used_entries,
             "dirty_misses": self.stats_dirty_misses,
+            "replay_entries": self.stats_replay_entries,
+            "log_full_scans": self.log.stats_full_scans,
             "lru_hits": self.lru.stats_hits,
             "lru_misses": self.lru.stats_misses,
             "lru_evictions": self.lru.stats_evictions,
             "cleanup_batches": self.cleanup.stats_batches,
             "cleanup_entries": self.cleanup.stats_entries,
             "cleanup_fsyncs": self.cleanup.stats_fsyncs,
+            "cleanup_fsyncs_issued": self.cleanup.stats_fsyncs_issued,
+            "cleanup_fsyncs_merged": self.cleanup.stats_fsyncs_merged,
+            "drain_extents": self.cleanup.stats_extents,
+            "drain_pwritevs": self.cleanup.stats_pwritevs,
             "nvmm_psyncs": self.nvmm.stats_psync,
         }

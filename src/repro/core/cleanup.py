@@ -1,16 +1,21 @@
 """The drain pool (paper §II-A step 6, §III "Cleanup thread and batching"),
-one drain thread per log shard.
+one drain thread per log shard, draining through the page-coalescing
+plan/apply engine of :mod:`repro.core.drain`.
 
 Each :class:`CleanupThread` consumes committed entries in log order from its
-shard's persistent tail and propagates them to the slow tier through
-ordinary ``pwrite`` calls (the writes land in the kernel page cache, which
-write-combines them — the paper's "volatile write cache behind a durable
-write cache"), then one ``fsync`` per touched file per batch, then durably
-retires the batch (zero commit flags, advance the shard's persistent tail,
-pwb/pfence, advance the volatile tail).  Because any two overlapping writes
-are routed to the same shard (see :mod:`repro.core.log`), independent
-per-shard drains cannot reorder conflicting updates, and K shards drain to
-the slow tier concurrently.
+shard's persistent tail.  Where the paper forwards them to the slow tier one
+``pwrite`` per entry and relies on the kernel page cache to write-combine
+(§IV-C), we build an explicit :class:`~repro.core.drain.DrainPlan` — entries
+grouped by (file, page), merged into page images, coalesced into extents —
+and apply it with vectored writes, so each dirty backend page is written at
+most once per batch.  Then one fsync per touched file per batch, routed
+through the pool's cross-shard :class:`~repro.core.drain.FsyncEpochScheduler`
+(concurrent per-shard fsyncs of the same backend file merge into one), and
+only then is the batch durably retired (zero commit flags, advance the
+shard's persistent tail, pwb/pfence, advance the volatile tail).  Because
+any two overlapping writes are routed to the same shard (see
+:mod:`repro.core.log`), independent per-shard drains cannot reorder
+conflicting updates, and K shards drain to the slow tier concurrently.
 
 Batching (paper §IV-C): each drainer waits for at least ``batch_min``
 committed entries in its shard unless a drain is requested (close/flush/
@@ -27,6 +32,8 @@ from __future__ import annotations
 import threading
 from typing import Callable, Iterable, Optional
 
+from repro.core import drain as _drain
+from repro.core.drain import FsyncEpochScheduler
 from repro.core.log import LogShard, NVLog
 
 
@@ -35,20 +42,27 @@ class CleanupThread(threading.Thread):
 
     def __init__(self, log: NVLog, shard: LogShard,
                  resolve_file: Callable[[int], Optional[object]],
-                 *, name: Optional[str] = None):
+                 *, fsync_scheduler: Optional[FsyncEpochScheduler] = None,
+                 name: Optional[str] = None):
         super().__init__(name=name or f"nvcache-drain-{shard.sid}", daemon=True)
         self.log = log
         self.shard = shard
         self.resolve_file = resolve_file      # fdid -> File (api.File) or None
+        self.fsync_scheduler = fsync_scheduler
         self.drain_event = threading.Event()  # ignore batch_min
         self.stop_event = threading.Event()   # finish current batch, then exit
         self.hard_stop = threading.Event()    # simulated power loss: exit NOW
+        self.fault_hook: Optional[Callable[[str], None]] = None
+        # ^ test-only: called at every plan/apply checkpoint (tag), may set
+        #   hard_stop to simulate power loss at that exact drain point
         self._drain_count = 0                 # nested drain requests
         self._drain_lock = threading.Lock()
         self.error: Optional[BaseException] = None
         self.stats_batches = 0
         self.stats_entries = 0
-        self.stats_fsyncs = 0
+        self.stats_fsyncs = 0                 # fsyncs *requested* (pre-merge)
+        self.stats_extents = 0                # extent writes issued
+        self.stats_pwritevs = 0               # vectored write calls issued
 
     def run(self) -> None:
         try:
@@ -66,41 +80,40 @@ class CleanupThread(threading.Thread):
             self.error = exc
 
     # ------------------------------------------------------------------
+    def _abort(self, tag: str) -> bool:
+        """Plan/apply checkpoint: power loss mid-batch leaves the log
+        unconsumed, so recovery replays the whole batch (idempotent)."""
+        if self.fault_hook is not None:
+            self.fault_hook(tag)
+        return self.hard_stop.is_set()
+
     def _consume_batch(self, run: int) -> None:
         shard = self.shard
-        ps = self.log.policy.page_size
+        pol = self.log.policy
         start = shard.persistent_tail
-        touched = {}          # File -> n_entries drained for it
-        for e in shard.scan_committed(start, start + run):
-            if self.hard_stop.is_set():
-                return        # power loss mid-batch: nothing retired, log replays
-            f = self.resolve_file(e.fdid)
-            if f is None:     # orphan (file force-closed); drop the entry
-                continue
-            p0, p1 = e.off // ps, (e.off + max(e.length, 1) - 1) // ps
-            descs = []
-            if f.radix is not None:
-                for p in range(p0, p1 + 1):
-                    d = f.radix.get_or_create(p)
-                    d.cleanup_lock.acquire()   # block dirty-miss readers (§II-D)
-                    descs.append(d)
-            try:
-                f.backend.pwrite(bytes(e.data), e.off)
-                for d in descs:
-                    d.dirty.dec()              # may transiently go negative (fn. 4)
-            finally:
-                for d in descs:
-                    d.cleanup_lock.release()
-            touched[f] = touched.get(f, 0) + 1
-            self.stats_entries += 1
-        if self.hard_stop.is_set():
+        # phase 1: group by (file, page), materialize images, coalesce extents
+        plan = _drain.build_plan(shard, start, run, self.resolve_file, pol,
+                                 abort=self._abort)
+        if plan is None:
             return
-        for f in touched:
-            f.backend.fsync()                  # one fsync per file per batch
-            self.stats_fsyncs += 1
-        shard.consume(start, run)              # durably retire the batch
-        for f, n in touched.items():
+        # phase 2: extent writes under page cleanup locks + index retire
+        drained = _drain.apply_plan(plan, pol, abort=self._abort, stats=self)
+        if drained is None:
+            return
+        if self._abort(_drain.FSYNC):
+            return
+        for f in drained:
+            self.stats_fsyncs += 1            # one request per file per batch
+            if self.fsync_scheduler is not None:
+                self.fsync_scheduler.fsync(f.backend)
+            else:
+                f.backend.fsync()
+        if self._abort(_drain.CONSUME):
+            return
+        shard.consume(start, run)             # durably retire the batch
+        for f, n in drained.items():
             f.note_drained(n)
+        self.stats_entries += sum(drained.values())
         self.stats_batches += 1
 
     # ------------------------------------------------------------------
@@ -132,12 +145,20 @@ class CleanupThread(threading.Thread):
 
 
 class CleanupPool:
-    """One drain thread per shard, addressed collectively or per shard."""
+    """One drain thread per shard, addressed collectively or per shard.
+
+    The pool owns the cross-shard :class:`FsyncEpochScheduler`: per-shard
+    batches that finish around the same time and touch the same backend
+    file share one fsync epoch instead of issuing K device fsyncs.
+    """
 
     def __init__(self, log: NVLog,
                  resolve_file: Callable[[int], Optional[object]]):
         self.log = log
-        self.threads = [CleanupThread(log, sh, resolve_file)
+        self.fsync_scheduler = FsyncEpochScheduler(
+            enabled=log.policy.fsync_epoch)
+        self.threads = [CleanupThread(log, sh, resolve_file,
+                                      fsync_scheduler=self.fsync_scheduler)
                         for sh in log.shards]
 
     def start(self) -> None:
@@ -188,3 +209,19 @@ class CleanupPool:
     @property
     def stats_fsyncs(self) -> int:
         return sum(t.stats_fsyncs for t in self.threads)
+
+    @property
+    def stats_extents(self) -> int:
+        return sum(t.stats_extents for t in self.threads)
+
+    @property
+    def stats_pwritevs(self) -> int:
+        return sum(t.stats_pwritevs for t in self.threads)
+
+    @property
+    def stats_fsyncs_issued(self) -> int:
+        return self.fsync_scheduler.stats_issued
+
+    @property
+    def stats_fsyncs_merged(self) -> int:
+        return self.fsync_scheduler.stats_merged

@@ -94,6 +94,35 @@ class Entry:
         self.data = data  # memoryview of length bytes (valid until recycled)
 
 
+class EntryRef:
+    """Stable, recycle-safe handle to one live log entry.
+
+    Per-shard indices are *monotonic* u64 (the slot of index ``i`` is
+    ``i % N``), so ``(sid, idx)`` names one entry for the lifetime of the
+    region: a recycled slot is refilled under a strictly larger index and a
+    stale ref can never silently alias the new occupant — ``seq`` (and the
+    header's off/length) double-check it.  The dirty-page index
+    (:class:`repro.core.readcache.PageDesc`) holds these instead of payload
+    copies; the payload is read back from NVMM via
+    :meth:`NVLog.ref_payload`, which is valid exactly while the ref is live
+    (refs are retired by the drain engine strictly before the entry is
+    recycled).
+    """
+
+    __slots__ = ("sid", "idx", "seq", "off", "length")
+
+    def __init__(self, sid: int, idx: int, seq: int, off: int, length: int):
+        self.sid = sid
+        self.idx = idx
+        self.seq = seq
+        self.off = off
+        self.length = length
+
+    def __repr__(self) -> str:  # debugging aid for index dumps
+        return (f"EntryRef(sid={self.sid}, idx={self.idx}, seq={self.seq}, "
+                f"off={self.off}, len={self.length})")
+
+
 class LogShard:
     """One independent circular sub-log (the paper's whole log when K=1)."""
 
@@ -208,15 +237,27 @@ class LogShard:
         self.nvmm.pwb(eoff, HDR_SIZE + len(data))
 
     def append(self, fdid: int, off: int, data: bytes, *, seq_source,
-               timeout: Optional[float] = None) -> tuple[int, int, int]:
+               timeout: Optional[float] = None,
+               on_alloc=None) -> tuple[int, int, int]:
         """The paper's write-cache append: alloc, fill, commit.
 
         Returns ``(head_idx, k, seq)``.  On return the write is durable
         (synchronous durability) and ordered (durable linearizability).
+
+        ``on_alloc(head, k, seq)`` runs after allocation but BEFORE the
+        commit flag is set.  The write path registers the group's refs in
+        the dirty-page index here: only once the commit makes the entries
+        visible can the drain retire them, so retire always finds the refs
+        — registering after ``append`` returned would race the drain the
+        way the paper's dirty counter did (its fn. 4 transient negative),
+        except an index cannot absorb a lost retirement the way a counter
+        absorbs a transient negative.
         """
         ed = self.policy.entry_data
         k = max(1, -(-len(data) // ed))
         head, seq = self.alloc(k, timeout=timeout, seq_source=seq_source)
+        if on_alloc is not None:
+            on_alloc(head, k, seq)
         # followers first (paper §II-D: they must be durable before the head
         # commit makes the whole group visible to recovery)
         for j in range(1, k):
@@ -341,6 +382,7 @@ class NVLog:
                                        for s in range(policy.shards)]
         self._seq_lock = threading.Lock()
         self._seq = 0
+        self.stats_full_scans = 0   # whole-log scans (must stay off hot paths)
         if format:
             self._format()
         else:
@@ -411,18 +453,61 @@ class NVLog:
     # ---------------------------------------------------------------- write
     def append(self, fdid: int, off: int, data: bytes,
                timeout: Optional[float] = None,
-               shard: Optional[int] = None) -> tuple[int, int, int]:
-        """Route and commit one write; returns ``(sid, head_idx, k)``."""
+               shard: Optional[int] = None,
+               on_alloc=None) -> tuple[int, int, int, int]:
+        """Route and commit one write; returns ``(sid, head_idx, k, seq)``.
+
+        ``on_alloc(sid, head, k, seq)`` runs pre-commit (see
+        :meth:`LogShard.append`) — the write path's hook for registering
+        the group in the dirty-page index before the drain can see it.
+        """
         sid = self.route(fdid, off) if shard is None else shard
-        head, k, _seq = self.shards[sid].append(fdid, off, data,
-                                                seq_source=self.next_seq,
-                                                timeout=timeout)
-        return sid, head, k
+        cb = None if on_alloc is None else (
+            lambda head, k, seq: on_alloc(sid, head, k, seq))
+        head, k, seq = self.shards[sid].append(fdid, off, data,
+                                               seq_source=self.next_seq,
+                                               timeout=timeout,
+                                               on_alloc=cb)
+        return sid, head, k, seq
+
+    # ------------------------------------------------------------------ refs
+    def group_refs(self, sid: int, head: int, k: int, seq: int, off: int,
+                   nbytes: int) -> List[EntryRef]:
+        """One :class:`EntryRef` per entry of a just-committed group, with
+        the per-entry file offset/length split that :meth:`LogShard.append`
+        used — the write path feeds these into the dirty-page index."""
+        ed = self.policy.entry_data
+        return [EntryRef(sid, head + j, seq, off + j * ed,
+                         min(ed, nbytes - j * ed))
+                for j in range(k)]
+
+    def ref_payload(self, ref: EntryRef) -> memoryview:
+        """Payload bytes of a *live* ref (dirty-miss replay).
+
+        The caller must hold the page's cleanup lock, which orders it
+        against the drain engine: a ref still present in a page's index has
+        not been retired, so its entry cannot have been recycled.  The
+        header check turns a protocol violation (reading through a stale
+        ref) into a loud error instead of silently replaying another
+        write's bytes.
+        """
+        sh = self.shards[ref.sid]
+        eoff = sh._eoff(ref.idx)
+        _cg, seq, foff, _fdid, length, _nf, _crc = _HDR.unpack_from(
+            self.nvmm.load(eoff, _HDR.size))
+        if seq != ref.seq or foff != ref.off or length != ref.length:
+            raise RuntimeError(f"stale {ref!r}: entry slot was recycled "
+                               f"(seq={seq} off={foff} len={length})")
+        return self.nvmm.load(eoff + HDR_SIZE, length)
 
     # ------------------------------------------------------------------ scan
     def scan_all_committed(self) -> Iterator[Entry]:
         """Committed entries of every shard, in no particular cross-shard
-        order (sort by ``(seq, idx)`` when ordering matters)."""
+        order (sort by ``(seq, idx)`` when ordering matters).  O(log) — kept
+        for recovery-style consumers and diagnostics only; the read path
+        uses the per-page dirty index instead (``stats_full_scans`` guards
+        that in tests)."""
+        self.stats_full_scans += 1
         for sh in self.shards:
             tail, head = sh.snapshot_bounds()
             yield from sh.scan_committed(tail, head)

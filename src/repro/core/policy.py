@@ -50,6 +50,12 @@ class Policy:
     shards: int = 1                    # independent sub-logs (1 == paper design)
     shard_route: str = "stripe"        # "stripe" | "fdid" (see module docstring)
     stripe_pages: int = 64             # stripe width, in read-cache pages
+    # drain engine (beyond paper; cf. dm-writeboost's coalesced submission):
+    drain_coalesce: bool = True        # plan/apply page+extent coalescing;
+    #                                    False == the paper's entry-at-a-time
+    coalesce_max_extent: int = MIB     # max bytes per coalesced extent write
+    fsync_epoch: bool = True           # merge concurrent per-shard fsyncs of
+    #                                    the same backend file into epochs
 
     def __post_init__(self):
         if self.page_size & (self.page_size - 1):
@@ -62,6 +68,9 @@ class Policy:
             raise ValueError("shard_route must be 'stripe' or 'fdid'")
         if self.stripe_pages < 1:
             raise ValueError("stripe_pages must be >= 1")
+        if self.coalesce_max_extent < self.page_size:
+            raise ValueError("coalesce_max_extent must be >= page_size "
+                             "(extents never split a page's merged range)")
         per = self.log_entries // self.shards
         if per < 2:
             raise ValueError("each shard needs at least 2 entries")
@@ -107,13 +116,19 @@ class Policy:
         return self.entries_base + self.log_entries * self.entry_size
 
 
-#: Paper §IV-A configuration (64 GiB log, 1 GiB read cache).
+#: Paper §IV-A configuration (64 GiB log, 1 GiB read cache), with the
+#: paper's propagation path: entry-at-a-time draining behind the kernel
+#: page cache, no user-space coalescing or fsync-epoch merging — the
+#: faithful-reproduction baseline the beyond-paper engine is measured
+#: against (benchmarks/fig8_coalescing.py).
 PAPER_DEFAULT = Policy(
     entry_size=4 * KIB,
     log_entries=16 * 1024 * 1024,
     read_cache_pages=250_000,
     batch_min=1000,
     batch_max=10000,
+    drain_coalesce=False,
+    fsync_epoch=False,
 )
 
 #: Small configuration for unit/property tests.

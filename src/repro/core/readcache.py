@@ -1,7 +1,16 @@
 """Volatile read cache (paper §II-C): page descriptors in a radix tree,
-page states {loaded, unloaded-clean, unloaded-dirty} via a dirty counter,
-and an LRU approximation with accessed flags (§II-D "scalable data
-structures").
+page states {loaded, unloaded-clean, unloaded-dirty} via a per-page
+**dirty-page index** (the ordered list of live log-entry refs touching the
+page — a strict refinement of the paper's dirty *counter*), and an LRU
+approximation with accessed flags (§II-D "scalable data structures").
+
+The index is maintained at both ends of an entry's life: the write path
+(``api._pwrite_op``) appends an :class:`~repro.core.log.EntryRef` to every
+page the entry overlaps, and the drain engine (:mod:`repro.core.drain`)
+retires the page's refs once the page's bytes are on the slow tier.  A
+dirty-miss read therefore replays exactly the E live entries of that page —
+O(E), where the dirty-counter design had to rescan the whole log to find
+them.  The drain planner materializes page images from the same index.
 
 CPython notes: the paper gets scalability from CAS-based lock-free inserts
 and per-page locks.  Under the GIL, single bytecode dict/list mutations are
@@ -49,19 +58,53 @@ class PageDesc:
     """Page descriptor (paper Table II / Fig. 2).
 
     States: loaded (content is not None), unloaded-dirty (content None,
-    dirty>0), unloaded-clean (content None, dirty==0).
+    ``entries`` non-empty), unloaded-clean (content None, ``entries`` empty).
+
+    ``entries`` is the dirty-page index: the live log-entry refs whose bytes
+    overlap this page, in commit (``seq``) order.  Appends happen under the
+    page's ``atomic_lock`` (the writer draws its seq while holding it, so
+    list order == seq order); retirement happens under ``cleanup_lock``; the
+    dedicated ``ref_lock`` makes the one remaining pairing — writer append
+    vs drain retire — safe without coupling those two locks.
     """
 
-    __slots__ = ("page_no", "atomic_lock", "cleanup_lock", "dirty", "content",
-                 "accessed")
+    __slots__ = ("page_no", "atomic_lock", "cleanup_lock", "ref_lock",
+                 "entries", "content", "accessed")
 
     def __init__(self, page_no: int):
         self.page_no = page_no
         self.atomic_lock = threading.Lock()    # write/read atomicity (§II-D)
         self.cleanup_lock = threading.Lock()   # vs cleanup thread (§II-D)
-        self.dirty = AtomicInt(0)              # log entries touching this page
+        self.ref_lock = threading.Lock()       # writer append vs drain retire
+        self.entries: list = []                # live EntryRefs, seq order
         self.content: Optional[PageContent] = None
         self.accessed = False
+
+    def add_ref(self, ref) -> None:
+        """Write path: register a just-committed entry on this page."""
+        with self.ref_lock:
+            self.entries.append(ref)
+
+    def retire_refs(self, sid: int, idxs) -> int:
+        """Drain path: drop the refs of shard ``sid`` whose monotonic index
+        is in ``idxs`` — their bytes reached the backend.  Returns the number
+        retired (order of survivors is preserved, so the list stays
+        seq-sorted)."""
+        with self.ref_lock:
+            keep = [r for r in self.entries
+                    if r.sid != sid or r.idx not in idxs]
+            retired = len(self.entries) - len(keep)
+            if retired:
+                self.entries = keep
+            return retired
+
+    def snapshot_refs(self) -> list:
+        with self.ref_lock:
+            return list(self.entries)
+
+    @property
+    def dirty_refs(self) -> int:
+        return len(self.entries)
 
 
 class RadixTree:
