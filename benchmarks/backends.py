@@ -26,12 +26,16 @@ NOVA = dataclasses.replace(tiers.NVMM_OPTANE, name="nova",
 
 def policy(log_mib: float, *, entry=4096, batch_min=1000, batch_max=10000,
            read_pages=1024, shards=1, shard_route="stripe",
-           drain_coalesce=True, fsync_epoch=True) -> Policy:
+           drain_coalesce=True, fsync_epoch=True, readahead=8,
+           span_batches=True, deadline_ms=5.0) -> Policy:
     return Policy(entry_size=entry, log_entries=max(8 * shards, int(log_mib * 1024 * 1024 // entry)),
                   page_size=4096, read_cache_pages=read_pages,
                   batch_min=batch_min, batch_max=batch_max, verify_crc=False,
                   shards=shards, shard_route=shard_route,
-                  drain_coalesce=drain_coalesce, fsync_epoch=fsync_epoch)
+                  drain_coalesce=drain_coalesce, fsync_epoch=fsync_epoch,
+                  readahead_pages=readahead,
+                  coalesce_span_batches=span_batches,
+                  coalesce_deadline_ms=deadline_ms)
 
 
 @dataclasses.dataclass
@@ -52,14 +56,18 @@ class Stack:
 def make_stack(name: str, *, log_mib: float = 64, batch_min=1000,
                batch_max=10000, read_pages=1024, scale: float = SCALE,
                shards: int = 1, shard_route: str = "stripe",
-               drain_coalesce: bool = True, fsync_epoch: bool = True) -> Stack:
+               drain_coalesce: bool = True, fsync_epoch: bool = True,
+               readahead: int = 8, span_batches: bool = True,
+               deadline_ms: float = 5.0) -> Stack:
     if name == "nvcache+ssd":
         tier = tiers.Tier(tiers.SSD_SATA, sync=False, scale=scale)
         nv = NVCache(policy(log_mib, batch_min=batch_min, batch_max=batch_max,
                             read_pages=read_pages, shards=shards,
                             shard_route=shard_route,
                             drain_coalesce=drain_coalesce,
-                            fsync_epoch=fsync_epoch), tier)
+                            fsync_epoch=fsync_epoch, readahead=readahead,
+                            span_batches=span_batches,
+                            deadline_ms=deadline_ms), tier)
         return Stack(name, NVCacheFS(nv), nv, tier)
     if name == "nvcache+nova":
         tier = tiers.Tier(NOVA, sync=False, scale=scale)
@@ -67,7 +75,9 @@ def make_stack(name: str, *, log_mib: float = 64, batch_min=1000,
                             read_pages=read_pages, shards=shards,
                             shard_route=shard_route,
                             drain_coalesce=drain_coalesce,
-                            fsync_epoch=fsync_epoch), tier)
+                            fsync_epoch=fsync_epoch, readahead=readahead,
+                            span_batches=span_batches,
+                            deadline_ms=deadline_ms), tier)
         return Stack(name, NVCacheFS(nv), nv, tier)
     if name == "dm-writecache":
         tier = tiers.DMWriteCacheTier(scale=scale)

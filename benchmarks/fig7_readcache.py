@@ -10,8 +10,11 @@ from benchmarks.fio_like import random_write
 def run(total_mib: float = 12, cache_pages=(8, 128, 4096)):
     rows = []
     for pages in cache_pages:
+        # readahead pinned to 1: this figure reproduces the paper's
+        # per-page Fig. 2 miss procedure (the PR-3 extent read path has
+        # its own figure, benchmarks/fig9_readpath.py)
         st = make_stack("nvcache+ssd", log_mib=4 * total_mib,
-                        read_pages=pages)
+                        read_pages=pages, readahead=1)
         try:
             r = random_write(st.fs, total_mib=total_mib, file_mib=total_mib,
                              read_fraction=0.5)

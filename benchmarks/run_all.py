@@ -1,18 +1,22 @@
 """CI entry point: run the PR's headline benchmarks and emit ONE
-machine-readable JSON (``BENCH_pr2.json``) so the perf trajectory of the
-repo is diffable from this PR onward.
+machine-readable JSON (``BENCH_pr3.json``) so the perf trajectory of the
+repo is diffable from PR 2 onward.
 
-    PYTHONPATH=src python benchmarks/run_all.py [--out BENCH_pr2.json] [--quick]
+    PYTHONPATH=src python benchmarks/run_all.py [--out BENCH_pr3.json] [--quick]
 
-Emitted metrics (schema ``bench_schema: 2``):
+Emitted metrics (schema ``bench_schema: 3``):
 
-* ``committed_mib_s``            — committed-write throughput of the
-  coalescing drain engine on the 4-writer 1 KiB-sequential saturated
-  workload (and ``committed_mib_s_entry_at_a_time`` for the baseline mode);
-* ``page_writes_per_committed_byte`` / ``..._entry_at_a_time`` — backend
-  page writes per committed byte in each mode, plus the reduction factor;
-* ``dirty_miss`` — average dirty-miss read latency and entries inspected
-  per miss (must equal the page's live-entry count: O(E), never O(log)).
+* ``cold_read`` — cold-sequential-read throughput and *backend page-read
+  operations per byte* at ``readahead_pages`` 8 vs 1 (the paper's per-page
+  Fig. 2 miss procedure), plus the reduction factor — the read-side twin of
+  PR 2's page-write coalescing (acceptance: >= 2x fewer read ops/byte);
+* ``mixed`` — 50/50 random read/write throughput at both readahead
+  settings (readahead never bypasses the dirty-index replay);
+* ``trickle`` — backend page writes per committed byte on a small-batch
+  trickle workload with batch-spanning coalescing vs the PR-2 tip
+  (``coalesce_span_batches=False``);
+* ``coalesce`` / ``fsync_epoch_hot_file`` / ``dirty_miss`` — the PR-2
+  figures re-measured at this tip so regressions stay visible.
 """
 from __future__ import annotations
 
@@ -23,38 +27,65 @@ import sys
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks import fig8_coalescing  # noqa: E402
+from benchmarks import fig8_coalescing, fig9_readpath  # noqa: E402
 
 
 def run(quick: bool = False) -> dict:
     total_mib = 4 if quick else 8
+    cold = fig9_readpath.run_cold_read(total_mib=2 if quick else 8)
+    mixed = fig9_readpath.run_mixed(total_mib=2 if quick else 6)
+    trickle = fig9_readpath.run_trickle(n_writes=64 if quick else 192)
     rows = fig8_coalescing.run_coalesce_compare(total_mib=total_mib)
     epoch = fig8_coalescing.run_fsync_epoch(total_mib=2 if quick else 4)
     dm = fig8_coalescing.run_dirty_miss(n_pages=64 if quick else 192)
+
+    cold_by_ra = {r["readahead_pages"]: r for r in cold}
+    mixed_by_ra = {r["readahead_pages"]: r for r in mixed}
+    trickle_by = {r["mode"]: r for r in trickle}
     by_mode = {r["mode"]: r for r in rows}
     entry, coal = by_mode["entry-at-a-time"], by_mode["coalesced"]
-    ppb_entry = entry["backend_page_writes_per_committed_byte"]
-    ppb_coal = coal["backend_page_writes_per_committed_byte"]
+    ropb1 = cold_by_ra[1]["read_ops_per_byte"]
+    ropb8 = cold_by_ra[8]["read_ops_per_byte"]
+    ppb_tip = trickle_by["pr2-tip"]["backend_page_writes_per_committed_byte"]
+    ppb_span = trickle_by["span-batches"]["backend_page_writes_per_committed_byte"]
     return {
-        "bench_schema": 2,
-        "pr": 2,
-        "workload": {"threads": coal["threads"], "bs": coal["bs"],
-                     "shards": coal["shards"], "total_mib": total_mib,
-                     "pattern": "sequential", "log_saturated": True},
-        "committed_mib_s": coal["mib_per_s"],
-        "committed_mib_s_entry_at_a_time": entry["mib_per_s"],
-        "throughput_speedup_x": coal["mib_per_s"] / max(1e-9, entry["mib_per_s"]),
-        "page_writes_per_committed_byte": ppb_coal,
-        "page_writes_per_committed_byte_entry_at_a_time": ppb_entry,
-        "page_write_reduction_x": ppb_entry / max(1e-12, ppb_coal),
-        "pwrites_per_committed_byte": coal["backend_pwrites_per_committed_byte"],
-        "pwrites_per_committed_byte_entry_at_a_time":
-            entry["backend_pwrites_per_committed_byte"],
-        "fsync_merge": {"requested": coal["fsyncs_requested"],
-                        "issued": coal["fsyncs_issued"]},
+        "bench_schema": 3,
+        "pr": 3,
+        "cold_read": {
+            "mib_per_s": cold_by_ra[8]["mib_per_s"],
+            "mib_per_s_readahead1": cold_by_ra[1]["mib_per_s"],
+            "read_ops_per_byte": ropb8,
+            "read_ops_per_byte_readahead1": ropb1,
+            "read_op_reduction_x": ropb1 / max(1e-12, ropb8),
+            "readahead_hit_rate": cold_by_ra[8]["readahead_hit_rate"],
+            "detail": cold,
+        },
+        "mixed": {
+            "mib_per_s": mixed_by_ra[8]["mib_per_s"],
+            "mib_per_s_readahead1": mixed_by_ra[1]["mib_per_s"],
+            "log_full_scans": mixed_by_ra[8]["log_full_scans"],
+            "detail": mixed,
+        },
+        "trickle": {
+            "page_writes_per_committed_byte": ppb_span,
+            "page_writes_per_committed_byte_pr2_tip": ppb_tip,
+            "page_write_reduction_x": ppb_tip / max(1e-12, ppb_span),
+            "detail": trickle,
+        },
+        "coalesce": {
+            "committed_mib_s": coal["mib_per_s"],
+            "committed_mib_s_entry_at_a_time": entry["mib_per_s"],
+            "page_writes_per_committed_byte":
+                coal["backend_page_writes_per_committed_byte"],
+            "page_writes_per_committed_byte_entry_at_a_time":
+                entry["backend_page_writes_per_committed_byte"],
+            "page_write_reduction_x":
+                entry["backend_page_writes_per_committed_byte"]
+                / max(1e-12, coal["backend_page_writes_per_committed_byte"]),
+            "detail": rows,
+        },
         "fsync_epoch_hot_file": epoch,
         "dirty_miss": dm,
-        "detail": rows,
     }
 
 
@@ -62,7 +93,7 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-        "BENCH_pr2.json"))
+        "BENCH_pr3.json"))
     ap.add_argument("--quick", action="store_true",
                     help="smaller workload for CI smoke runs")
     args = ap.parse_args()
@@ -71,9 +102,12 @@ def main() -> None:
         json.dump(result, fh, indent=2, sort_keys=True)
         fh.write("\n")
     print(f"wrote {args.out}: "
-          f"{result['committed_mib_s']:.1f} MiB/s committed, "
-          f"{result['page_write_reduction_x']:.1f}x fewer backend page "
-          f"writes per committed byte vs entry-at-a-time", flush=True)
+          f"{result['cold_read']['read_op_reduction_x']:.1f}x fewer backend "
+          f"read ops/byte (ra=8 vs 1), "
+          f"{result['trickle']['page_write_reduction_x']:.1f}x fewer trickle "
+          f"page writes vs PR2 tip, "
+          f"{result['coalesce']['committed_mib_s']:.1f} MiB/s committed",
+          flush=True)
 
 
 if __name__ == "__main__":

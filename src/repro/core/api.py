@@ -38,7 +38,8 @@ class File:
     """Per-(device,inode) state (paper §III "Open": the file table)."""
 
     __slots__ = ("path", "fdid", "backend", "radix", "size", "size_lock",
-                 "refs", "pending", "shards_touched", "_drained")
+                 "refs", "pending", "shards_touched", "_drained", "ra_next",
+                 "hwm")
 
     def __init__(self, path: str, fdid: int, backend):
         self.path = path
@@ -46,11 +47,16 @@ class File:
         self.backend = backend
         self.radix: Optional[RadixTree] = None   # created on first write-open
         self.size = backend.size()
+        self.hwm = self.size      # committed high-water mark: size minus any
+        #                           not-yet-committed O_APPEND reservation
         self.size_lock = threading.Lock()
         self.refs = 0
         self.pending = AtomicInt(0)              # log entries not yet drained
         self.shards_touched: set = set()         # sids holding entries for us
         self._drained = threading.Condition()
+        self.ra_next = -1                        # readahead stream detector:
+        #   the page a sequential miss stream would miss next; racy by
+        #   design (a heuristic, like the kernel's per-file ra window)
 
     def note_drained(self, n: int) -> None:      # called by the cleanup thread
         self.pending.dec(n)
@@ -104,6 +110,9 @@ class NVCache:
         self._crashed = False
         self.stats_dirty_misses = 0
         self.stats_replay_entries = 0   # refs inspected across dirty misses
+        self.stats_readahead_loads = 0  # extent loads that prefetched pages
+        self.stats_readahead_pages = 0  # pages loaded beyond the missed one
+        self.stats_readahead_hits = 0   # first demand-hits on prefetched pages
 
     # ------------------------------------------------------------- lifecycle
     def _resolve_fdid(self, fdid: int) -> Optional[File]:
@@ -137,6 +146,12 @@ class NVCache:
                     raise TimeoutError(f"drain of {f.path} timed out")
         finally:
             self.cleanup.end_drain()
+        with self._meta:
+            # sweep files orphaned by a timed-out close barrier (refs 0,
+            # kept only so the drain could finish): they are drained now
+            for f in list(self._files.values()):
+                if f.refs == 0:
+                    self._maybe_retire_locked(f)
         self.check()
 
     # ------------------------------------------------------------------ open
@@ -162,10 +177,88 @@ class NVCache:
             of = OpenFile(f, flags)
             self._open[fd] = of
         if flags & O_TRUNC and accmode != O_RDONLY:
-            with f.size_lock:
-                f.size = 0
-            f.backend.truncate(0)
+            try:
+                self._truncate_file(f)
+            except BaseException:
+                # the caller gets an exception, not the fd — unwind the
+                # registration above or the descriptor would leak forever
+                with self._meta:
+                    self._open.pop(fd, None)
+                    self._release_file_locked(f)
+                raise
         return fd
+
+    def _release_file_locked(self, f: File) -> None:
+        """Drop one reference; fully retire the file table entry once it is
+        unreferenced AND drained.  Caller holds ``_meta``.
+
+        The pending check is load-bearing: retiring the fdid while
+        committed entries still point at it would make the drain drop them
+        as orphans — or, worse, a reused fdid would route them into an
+        unrelated file.  On a drain-barrier timeout the File therefore
+        stays registered (and resolvable) until its entries land; it is
+        reclaimed by a later open() of the same path (which adopts it) or
+        by the orphan sweep in :meth:`flush`."""
+        f.refs -= 1
+        self._maybe_retire_locked(f)
+
+    def _maybe_retire_locked(self, f: File) -> None:
+        if (f.refs == 0 and f.pending.get() <= 0
+                and self._files.get(f.path) is f):
+            self._files.pop(f.path, None)
+            self._by_fdid.pop(f.fdid, None)
+            self.log.fd_table_set(f.fdid, "")   # retire the NVMM slot
+            self._fdid_free.append(f.fdid)
+            f.backend.close()
+
+    def _truncate_file(self, f: File) -> None:
+        """O_TRUNC: make the file empty *everywhere*, not just the backend.
+
+        Undrained log entries, dirty-page-index refs and loaded page
+        contents all hold pre-truncate bytes; truncating only the backend
+        let a later drain resurrect them and let cached reads serve stale
+        data.  Order: drain the file's touched shards first (consuming its
+        entries durably, exactly as ``close`` does — so a crash after this
+        point cannot replay pre-truncate bytes either), then purge the
+        radix refs/contents under the page locks, then truncate the
+        backend and the user-space size."""
+        self._drain_barrier(f, "O_TRUNC")
+        # order matters: size to 0 first (readers clamp against it, so no
+        # new read can reach the backend), then truncate the backend, then
+        # purge — a reader that re-cached a pre-truncate page between the
+        # drain and here is cleaned up by the purge.  A load whose desc the
+        # purge walk could miss (inserted only while the walk runs) is
+        # necessarily harmless: its backend pread happens after the
+        # truncate below and reads zeros, while any load that read the
+        # backend *before* the truncate inserted its desc before the walk
+        # began and is purged under its page locks.
+        with f.size_lock:
+            f.size = 0
+            f.hwm = 0
+        f.backend.truncate(0)
+        if f.radix is not None:
+            for d in f.radix.iter_descs():
+                with d.atomic_lock, d.cleanup_lock:
+                    if d.content is not None:
+                        d.content.desc = None     # LRU reclaims it as free
+                        d.content = None
+                    d.prefetched = False
+                    # refs are NOT cleared here: the drain barrier above
+                    # already retired every pre-truncate ref, so any ref
+                    # present now belongs to a write committed *after* the
+                    # barrier by a concurrent fd — clearing it would blind
+                    # readers to an entry the drain will still land
+
+    def _drain_barrier(self, f: File, label: str) -> None:
+        """Drain the shards ``f`` touched and wait for its entries to land
+        — the shared barrier under close/flock/O_TRUNC."""
+        touched = set(f.shards_touched)
+        self.cleanup.request_drain(touched)
+        try:
+            if not f.wait_drained(timeout=60.0):
+                raise TimeoutError(f"drain of {f.path} timed out on {label}")
+        finally:
+            self.cleanup.end_drain(touched)
 
     def close(self, fd: int) -> None:
         """Flush this file's pending writes to the kernel, then close
@@ -173,21 +266,17 @@ class NVCache:
         shards this file actually touched are asked to drain."""
         of = self._pop_fd(fd)
         f = of.file
-        touched = set(f.shards_touched)
-        self.cleanup.request_drain(touched)
         try:
-            if not f.wait_drained(timeout=60.0):
-                raise TimeoutError(f"drain of {f.path} timed out on close")
+            self._drain_barrier(f, "close")
         finally:
-            self.cleanup.end_drain(touched)
-        with self._meta:
-            f.refs -= 1
-            if f.refs == 0:
-                self._files.pop(f.path, None)
-                self._by_fdid.pop(f.fdid, None)
-                self.log.fd_table_set(f.fdid, "")   # retire the NVMM slot
-                self._fdid_free.append(f.fdid)
-                f.backend.close()
+            # teardown must run even when the drain barrier fails: the fd
+            # was already popped, so skipping the refcount would leak the
+            # File, its fdid slot and its NVMM fd-table entry forever.
+            # (_release_file_locked keeps the File resolvable while
+            # undrained entries exist — a timed-out barrier must not turn
+            # acknowledged bytes into orphans.)
+            with self._meta:
+                self._release_file_locked(f)
         self.check()
 
     def _pop_fd(self, fd: int) -> OpenFile:
@@ -210,9 +299,19 @@ class NVCache:
             raise OSError("fd is read-only")
         if off < 0:
             raise OSError("negative offset (EINVAL)")
-        f = of.file
         if not data:
             return 0
+        return self._pwrite_split(of.file, data, off)
+
+    def _pwrite_split(self, f: File, data: bytes, off: int,
+                      progress: Optional[list] = None) -> int:
+        """Split a write into per-op chunks and commit each (Alg. 1).
+
+        ``progress``, when given, is a 1-element list updated with the
+        bytes durably committed so far — after a mid-write failure those
+        bytes are in the log (and will reach the backend / survive
+        recovery), so callers that roll back bookkeeping must roll back to
+        ``off + progress[0]``, never to ``off``."""
         pol = self.policy
         max_op = (pol.entries_per_shard - 1) * pol.entry_data
         split_stripes = pol.shards > 1 and pol.shard_route == "stripe"
@@ -229,6 +328,8 @@ class NVCache:
             chunk = view[written:written + lim]
             self._pwrite_op(f, bytes(chunk), off + written)
             written += len(chunk)
+            if progress is not None:
+                progress[0] = written
         return len(data)
 
     def _pwrite_op(self, f: File, data: bytes, off: int) -> None:
@@ -268,6 +369,8 @@ class NVCache:
             with f.size_lock:
                 if off + n > f.size:
                     f.size = off + n
+                if off + n > f.hwm:
+                    f.hwm = off + n
         finally:
             for d in reversed(descs):
                 d.atomic_lock.release()
@@ -277,12 +380,37 @@ class NVCache:
         f = of.file
         with of.cursor_lock:
             if of.flags & O_APPEND:
+                # reserve the range up front so concurrent appends get
+                # disjoint offsets; roll the reservation back if the log
+                # append fails (LogFullTimeout), else the size stays
+                # inflated forever and readers see zero-filled bytes that
+                # were never written.  A split write that fails midway
+                # rolls back only to the committed prefix — those bytes
+                # are durable in the log and recovery WILL land them, so
+                # hiding them behind a smaller size would resurrect them
+                # as "stale bytes past EOF" after a crash.
+                if of.flags & _ACCMODE == O_RDONLY:
+                    raise OSError("fd is read-only")
                 with f.size_lock:
                     off = f.size
                     f.size = off + len(data)
+                progress = [0]
+                try:
+                    n = (self._pwrite_split(f, data, off, progress)
+                         if data else 0)
+                except BaseException:
+                    with f.size_lock:
+                        if f.size == off + len(data):   # no append raced past
+                            # never shrink below the committed high-water
+                            # mark: a concurrent pwrite INTO our reserved
+                            # range leaves size untouched but its bytes
+                            # are durable — hiding them behind a smaller
+                            # size would lose acknowledged data
+                            f.size = max(off + progress[0], f.hwm)
+                    raise
             else:
                 off = of.cursor
-            n = self.pwrite(fd, data, off)
+                n = self.pwrite(fd, data, off)
             of.cursor = off + n
             return n
 
@@ -308,52 +436,145 @@ class NVCache:
         ps = self.policy.page_size
         out = bytearray(n)
         pos = off
+        just_loaded = -1
         while pos < off + n:
             p = pos // ps
             d = f.radix.get_or_create(p)
             with d.atomic_lock:
-                if d.content is None:
-                    self._load_page(f, d)     # miss path
-                else:
-                    self.lru.stats_hits += 1
-                d.accessed = True
-                pstart = p * ps
-                s = pos - pstart
-                e = min(off + n - pstart, ps)
-                out[pos - off:pstart + e - off] = d.content.data[s:e]
-                pos = pstart + e
+                c = d.content
+                if c is not None:
+                    if p != just_loaded:      # the retry after our own
+                        self.lru.stats_hits += 1   # miss load is not a hit
+                        if d.prefetched:      # first demand-hit on a
+                            d.prefetched = False   # readahead-loaded page
+                            self.stats_readahead_hits += 1
+                    d.accessed = True
+                    pstart = p * ps
+                    s = pos - pstart
+                    e = min(off + n - pstart, ps)
+                    out[pos - off:pstart + e - off] = c.data[s:e]
+                    pos = pstart + e
+                    continue
+            # miss: load the aligned extent covering p (takes its own
+            # locks), then retry this page — it can in principle be evicted
+            # again before the retry, in which case the loop reloads it
+            self._load_extent(f, p)
+            just_loaded = p
         return bytes(out)
 
-    def _load_page(self, f: File, d) -> None:
-        """Cache-miss path (Fig. 2): evict, pread, dirty-miss replay."""
+    def _extent_range(self, f: File, p: int) -> tuple:
+        """Aligned readahead window [e0, e1) around page ``p``: up to
+        ``Policy.readahead_pages`` pages (clamped to half the read cache so
+        a load can never flush the cache it feeds), clipped to the file's
+        last page.
+
+        Readahead opens only for a *sequential* miss stream (``p`` is the
+        page the previous miss predicted, kernel-style): a random miss
+        loads just its own page, so random workloads never pay device cost
+        for 7 prefetched pages they will evict unused."""
+        ra = min(self.policy.readahead_pages, max(1, self.lru.capacity // 2))
+        if ra <= 1 or p != f.ra_next:
+            f.ra_next = p + 1
+            return p, p + 1
+        e0 = (p // ra) * ra
+        with f.size_lock:
+            size = f.size
+        last = (size - 1) // self.policy.page_size if size > 0 else 0
+        e1 = max(p + 1, min(e0 + ra, last + 1))
+        f.ra_next = e1
+        return e0, e1
+
+    def _load_extent(self, f: File, p: int) -> None:
+        """Cache-miss path, extent-granular (the read-side twin of the
+        drain engine; paper Fig. 2 generalized from one page to one aligned
+        extent): acquire buffers, one vectored backend read for the
+        extent's uncached runs, then the per-page dirty-index replay —
+        readahead NEVER bypasses the replay, so prefetched pages obey the
+        same durable-linearizability rules as demand misses."""
         ps = self.policy.page_size
-        self.lru.stats_misses += 1
-        content = self.lru.acquire_buffer()
-        with d.cleanup_lock:                  # block cleanup for this page
-            base = d.page_no * ps
-            raw = f.backend.pread(ps, base)
-            content.data[:len(raw)] = raw
-            if len(raw) < ps:
-                content.data[len(raw):] = bytes(ps - len(raw))
-            refs = d.snapshot_refs()
-            if refs:
-                # dirty miss: replay ONLY this page's live entries from the
-                # dirty-page index, already in commit (seq) order — O(E) for
-                # E entries on the page, where the dirty-counter design had
-                # to rescan the whole log.  All of a page's entries live in
-                # one shard (overlap routing), and holding cleanup_lock
-                # means none of them can be retired/recycled mid-replay, so
-                # ref_payload reads are stable.
-                self.stats_dirty_misses += 1
-                self.stats_replay_entries += len(refs)
-                for ref in refs:
-                    edata = self.log.ref_payload(ref)
-                    s = max(ref.off, base)
-                    t = min(ref.off + ref.length, base + ps)
-                    if s < t:
-                        content.data[s - base:t - base] = \
-                            edata[s - ref.off:t - ref.off]
-            self.lru.attach(d, content)
+        e0, e1 = self._extent_range(f, p)
+        descs = [f.radix.get_or_create(q) for q in range(e0, e1)]
+        held = descs
+        for d in descs:                       # ascending: same order writers use
+            d.atomic_lock.acquire()
+        try:
+            need = [d for d in descs if d.content is None]
+            if not any(d.page_no == p for d in need):
+                return                        # raced: another reader loaded p
+            # drop the locks of in-window pages that are already cached:
+            # nothing below touches them, and holding them would stall
+            # writers to those pages for a device-read latency
+            needset = {id(d) for d in need}
+            for d in descs:
+                if id(d) not in needset:
+                    d.atomic_lock.release()
+            held = need
+            self.lru.stats_misses += 1
+            if len(need) > 1:
+                self.stats_readahead_loads += 1
+                self.stats_readahead_pages += len(need) - 1
+            bufs = self.lru.acquire_buffers(len(need))
+            for d in need:                    # ascending, after atomic locks
+                d.cleanup_lock.acquire()
+            try:
+                # one backend operation: contiguous runs of missing pages
+                # become the iovec segments (pages loaded/cached in between
+                # are skipped, not re-read)
+                iov = []
+                run_start = prev = None
+                for d in need:
+                    if prev is not None and d.page_no == prev + 1:
+                        prev = d.page_no
+                        continue
+                    if run_start is not None:
+                        iov.append(((prev - run_start + 1) * ps, run_start * ps))
+                    run_start = prev = d.page_no
+                iov.append(((prev - run_start + 1) * ps, run_start * ps))
+                preadv = getattr(f.backend, "preadv", None)
+                if preadv is not None:
+                    chunks = preadv(iov)
+                else:
+                    chunks = [f.backend.pread(nn, oo) for nn, oo in iov]
+                raw_by_page = {}
+                for (nn, oo), chunk in zip(iov, chunks):
+                    for q in range(oo // ps, (oo + nn) // ps):
+                        raw_by_page[q] = chunk[q * ps - oo:(q + 1) * ps - oo]
+                for d, content in zip(need, bufs):
+                    raw = raw_by_page[d.page_no]
+                    content.data[:len(raw)] = raw
+                    if len(raw) < ps:
+                        content.data[len(raw):] = bytes(ps - len(raw))
+                    self._replay_page(d, content)
+                    self.lru.attach(d, content)
+                    d.prefetched = d.page_no != p
+            finally:
+                for d in reversed(need):
+                    d.cleanup_lock.release()
+        finally:
+            for d in reversed(held):
+                d.atomic_lock.release()
+
+    def _replay_page(self, d, content) -> None:
+        """Dirty-miss replay under the page's cleanup lock: apply ONLY this
+        page's live entries from the dirty-page index, already in commit
+        (seq) order — O(E) for E entries on the page, where the
+        dirty-counter design had to rescan the whole log.  All of a page's
+        entries live in one shard (overlap routing), and holding
+        cleanup_lock means none of them can be retired/recycled mid-replay,
+        so ref_payload reads are stable."""
+        refs = d.snapshot_refs()
+        if not refs:
+            return
+        ps = self.policy.page_size
+        base = d.page_no * ps
+        self.stats_dirty_misses += 1
+        self.stats_replay_entries += len(refs)
+        for ref in refs:
+            edata = self.log.ref_payload(ref)
+            s = max(ref.off, base)
+            t = min(ref.off + ref.length, base + ps)
+            if s < t:
+                content.data[s - base:t - base] = edata[s - ref.off:t - ref.off]
 
     def read(self, fd: int, n: int) -> bytes:
         of = self._of(fd)
@@ -372,13 +593,7 @@ class NVCache:
         file's pending writes to the kernel so other processes see them."""
         of = self._of(fd)
         if unlock:
-            touched = set(of.file.shards_touched)
-            self.cleanup.request_drain(touched)
-            try:
-                if not of.file.wait_drained(timeout=60.0):
-                    raise TimeoutError(f"flock drain of {of.file.path} timed out")
-            finally:
-                self.cleanup.end_drain(touched)
+            self._drain_barrier(of.file, "flock release")
 
     def lseek(self, fd: int, off: int, whence: int = os.SEEK_SET) -> int:
         of = self._of(fd)
@@ -403,6 +618,13 @@ class NVCache:
         else:
             f = self._files.get(fd_or_path)
             if f is None:
+                # stat must not mutate the namespace: Tier.open inserts on
+                # miss, which used to create an empty phantom file here
+                size_of = getattr(self.tier, "size_of", None)
+                if size_of is not None:
+                    return size_of(fd_or_path)   # raises FileNotFoundError
+                if not self.tier.exists(fd_or_path):
+                    raise FileNotFoundError(fd_or_path)
                 return self.tier.open(fd_or_path).size()
         with f.size_lock:
             return f.size
@@ -418,6 +640,11 @@ class NVCache:
             "lru_hits": self.lru.stats_hits,
             "lru_misses": self.lru.stats_misses,
             "lru_evictions": self.lru.stats_evictions,
+            "readahead_loads": self.stats_readahead_loads,
+            "readahead_pages": self.stats_readahead_pages,
+            "readahead_hits": self.stats_readahead_hits,
+            "readahead_hit_rate": self.stats_readahead_hits
+                / max(1, self.stats_readahead_pages),
             "cleanup_batches": self.cleanup.stats_batches,
             "cleanup_entries": self.cleanup.stats_entries,
             "cleanup_fsyncs": self.cleanup.stats_fsyncs,
@@ -425,5 +652,7 @@ class NVCache:
             "cleanup_fsyncs_merged": self.cleanup.stats_fsyncs_merged,
             "drain_extents": self.cleanup.stats_extents,
             "drain_pwritevs": self.cleanup.stats_pwritevs,
+            "drain_deferred": self.cleanup.stats_deferred,
+            "drain_span_merges": self.cleanup.stats_span_merges,
             "nvmm_psyncs": self.nvmm.stats_psync,
         }

@@ -23,6 +23,15 @@ log-full backpressure), and consumes at most ``batch_max`` — the shared
 :class:`~repro.core.policy.Policy` bounds are the pool's common
 backpressure contract.
 
+Batch-*spanning* coalescing (beyond paper; cf. NVLog's open tail extent):
+a batch may leave its contiguous tail extent — the still-filling tail page
+— unconsumed (:func:`repro.core.drain.choose_deferred_suffix`), so the
+next batch's contiguous entries merge into the same backend write instead
+of re-writing the page per tiny batch.  The carry is closed by fresh
+non-contiguous entries, by ``Policy.coalesce_deadline_ms``, by log-space
+pressure, or by any drain barrier; carried entries remain committed in the
+log with live dirty-page-index refs, so reads and recovery are untouched.
+
 :class:`CleanupPool` owns the threads and lets callers target a drain at
 just the shards a file actually touched (``fsync``/``close`` wait only on
 those) or at every shard (``flush``).
@@ -30,6 +39,7 @@ those) or at every shard (``flush``).
 from __future__ import annotations
 
 import threading
+import time
 from typing import Callable, Iterable, Optional
 
 from repro.core import drain as _drain
@@ -57,20 +67,36 @@ class CleanupThread(threading.Thread):
         #   hard_stop to simulate power loss at that exact drain point
         self._drain_count = 0                 # nested drain requests
         self._drain_lock = threading.Lock()
+        # batch-spanning coalescing: the carried (deferred, unconsumed)
+        # tail-extent entries of the previous batch, their oldest log index
+        # (the identity of the open extent) and when they were first carried
+        self._span_deferred = 0
+        self._span_oldest = -1
+        self._span_since = 0.0
+        self._span_maxidx = -1                # highest log idx ever carried
+        self._span_carry_batches = 0          # batches feeding the open carry
         self.error: Optional[BaseException] = None
         self.stats_batches = 0
         self.stats_entries = 0
         self.stats_fsyncs = 0                 # fsyncs *requested* (pre-merge)
         self.stats_extents = 0                # extent writes issued
         self.stats_pwritevs = 0               # vectored write calls issued
+        self.stats_deferred = 0               # entries carried across batches
+        self.stats_span_merges = 0            # batches that merged a carry
 
     def run(self) -> None:
         try:
             while not self.hard_stop.is_set():
                 min_needed = 1 if self.drain_event.is_set() else self.log.policy.batch_min
+                deadline_at = None
+                if self._span_deferred:
+                    deadline_at = (self._span_since +
+                                   self.log.policy.coalesce_deadline_ms / 1e3)
                 run = self.shard.wait_committed(min_needed,
                                                drain_event=self.drain_event,
-                                               stop_event=self.stop_event)
+                                               stop_event=self.stop_event,
+                                               deferred=self._span_deferred,
+                                               deadline_at=deadline_at)
                 if run == 0:
                     if self.stop_event.is_set() or self.hard_stop.is_set():
                         return
@@ -91,8 +117,19 @@ class CleanupThread(threading.Thread):
         shard = self.shard
         pol = self.log.policy
         start = shard.persistent_tail
+        # phase 0: batch-spanning coalescing — leave the contiguous tail
+        # extent unconsumed (its consume/ref-retire deferred until it is
+        # flushed) so the next batch's contiguous entries merge into one
+        # backend write.  Everything below operates on the shortened run;
+        # the deferred entries simply stay committed at the log tail.
+        carried = self._span_deferred
+        defer = self._choose_defer(run)
+        eff = run - defer
+        if eff == 0:                          # whole batch stays open
+            self._note_deferred(start, run)
+            return
         # phase 1: group by (file, page), materialize images, coalesce extents
-        plan = _drain.build_plan(shard, start, run, self.resolve_file, pol,
+        plan = _drain.build_plan(shard, start, eff, self.resolve_file, pol,
                                  abort=self._abort)
         if plan is None:
             return
@@ -110,11 +147,60 @@ class CleanupThread(threading.Thread):
                 f.backend.fsync()
         if self._abort(_drain.CONSUME):
             return
-        shard.consume(start, run)             # durably retire the batch
+        shard.consume(start, eff)             # durably retire the batch
+        if carried and (run > carried or self._span_carry_batches > 1):
+            # a real cross-batch write-combine: the plan joined carried
+            # entries with newer ones, or flushed a carry that accumulated
+            # over several batches — a lone carry flushed by the deadline
+            # with nothing to merge does not count
+            self.stats_span_merges += 1
         for f, n in drained.items():
             f.note_drained(n)
         self.stats_entries += sum(drained.values())
         self.stats_batches += 1
+        self._note_deferred(start + eff, defer)
+
+    def _choose_defer(self, run: int) -> int:
+        """Entries of this batch to carry (see
+        :func:`repro.core.drain.choose_deferred_suffix`), or 0 when a
+        barrier forbids carrying: an explicit drain request (close/flush/
+        fsync must make everything durable on the slow tier), shutdown, an
+        expired carry deadline, or log-space pressure (writers may be
+        blocked on recycling — the carry must never extend a log-full
+        stall)."""
+        pol = self.log.policy
+        if not (pol.drain_coalesce and pol.coalesce_span_batches):
+            return 0
+        if (self.drain_event.is_set() or self.stop_event.is_set()
+                or self.hard_stop.is_set()):
+            return 0
+        if (self._span_deferred
+                and time.monotonic() - self._span_since
+                >= pol.coalesce_deadline_ms / 1e3):
+            return 0
+        if 2 * self.shard.used_entries >= self.shard.n:
+            return 0
+        return _drain.choose_deferred_suffix(
+            self.shard, self.shard.persistent_tail, run, pol)
+
+    def _note_deferred(self, dstart: int, count: int) -> None:
+        if count <= 0:
+            self._span_deferred = 0
+            self._span_oldest = -1
+            return
+        if not (self._span_deferred and self._span_oldest == dstart):
+            # a different open extent; same extent (possibly grown) keeps
+            # its age from the FIRST carry, so the deadline bounds real age
+            self._span_since = time.monotonic()
+            self._span_oldest = dstart
+            self._span_carry_batches = 1
+        elif count > self._span_deferred:     # another batch joined the carry
+            self._span_carry_batches += 1
+        last = dstart + count - 1
+        if last > self._span_maxidx:          # count each entry's carry once
+            self.stats_deferred += last - max(self._span_maxidx, dstart - 1)
+            self._span_maxidx = last
+        self._span_deferred = count
 
     # ------------------------------------------------------------------
     def request_drain(self) -> None:
@@ -217,6 +303,14 @@ class CleanupPool:
     @property
     def stats_pwritevs(self) -> int:
         return sum(t.stats_pwritevs for t in self.threads)
+
+    @property
+    def stats_deferred(self) -> int:
+        return sum(t.stats_deferred for t in self.threads)
+
+    @property
+    def stats_span_merges(self) -> int:
+        return sum(t.stats_span_merges for t in self.threads)
 
     @property
     def stats_fsyncs_issued(self) -> int:

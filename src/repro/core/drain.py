@@ -39,7 +39,7 @@ from __future__ import annotations
 import threading
 from typing import Callable, Dict, List, Optional
 
-from repro.core.log import LogShard
+from repro.core.log import CG_HEAD, LogShard
 from repro.core.policy import Policy
 
 # fault-injection / power-loss checkpoint tags, in batch order
@@ -127,6 +127,68 @@ class _FileAcc:
         self.raw: List[tuple] = []      # legacy mode: (off, bytes, idx)
         self.entries = 0
         self.nbytes = 0
+
+
+def choose_deferred_suffix(shard: LogShard, start: int, run: int,
+                           policy: Policy) -> int:
+    """Batch-spanning coalescing, phase 0: how many log-order tail entries
+    of this batch to leave *unconsumed* so the next batch's contiguous
+    entries merge into the same backend write (the way NVLog keeps its tail
+    extent open across syncs).
+
+    The carried suffix is the maximal run of whole committed groups,
+    walking back from the batch tail, that (a) belong to one file, (b)
+    union into a single contiguous byte interval — the open tail extent —
+    and (c) lie inside ONE page-aligned page: the open tail *page*.  The
+    page boundary is the natural cut because a page whose bytes are all
+    present can never be improved by further coalescing (it is written once
+    either way), while the still-filling tail page is exactly what a small
+    trailing batch would otherwise rewrite per batch; the one-page cap also
+    keeps the carry negligible for big saturated batches (no latency
+    hiccups).  Deferring is merely *not draining yet*: the entries stay
+    committed in the log, their dirty-page-index refs stay live, reads
+    replay them and recovery replays them — every durability invariant
+    holds by construction, and the next batch's plan re-materializes them
+    together with the new entries (write-combined across the batch
+    boundary).  The caller enforces the deadline / drain-barrier / space
+    conditions and never defers past them.
+    """
+    if run <= 0:
+        return 0
+    # only the tail can be carried, so only the tail needs scanning: a
+    # 1-page suffix spans at most ceil(ps/entry_data) entries per group and
+    # a handful of groups — scanning the whole batch here would duplicate
+    # build_plan's O(run) scan for a decision about the last page.  A scan
+    # landing mid-group sees that group's followers as holes and skips
+    # them, so `groups` holds only whole groups, never a truncated one.
+    window = min(run, 4 * (-(-policy.page_size // policy.entry_data)) + 8)
+    lo_idx = start + run - window
+    # whole committed groups of the window: [nentries, fdid, lo, hi)
+    groups: List[list] = []
+    for e in shard.scan_committed(lo_idx, start + run):
+        if e.cg == CG_HEAD:
+            groups.append([1 + e.nfollow, e.fdid, e.off, e.off + e.length])
+        elif groups:
+            g = groups[-1]
+            g[2] = min(g[2], e.off)
+            g[3] = max(g[3], e.off + e.length)
+    ps = policy.page_size
+    defer = 0
+    lo = hi = fdid = None
+    for cnt, fid, glo, ghi in reversed(groups):
+        if ghi <= glo:
+            break                       # empty group: nothing to carry
+        if lo is None:
+            nlo, nhi = glo, ghi
+        elif fid != fdid or ghi < lo or glo > hi:
+            break                       # different file / not contiguous
+        else:
+            nlo, nhi = min(lo, glo), max(hi, ghi)
+        if nlo // ps != (nhi - 1) // ps:
+            break                       # crosses the open page: close it
+        lo, hi, fdid = nlo, nhi, fid
+        defer += cnt
+    return defer
 
 
 def build_plan(shard: LogShard, start: int, run: int,

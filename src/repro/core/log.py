@@ -53,6 +53,7 @@ from __future__ import annotations
 
 import struct
 import threading
+import time
 import zlib
 from typing import Iterator, List, Optional
 
@@ -296,18 +297,35 @@ class LogShard:
         return count
 
     def wait_committed(self, min_entries: int, *, drain_event: threading.Event,
-                       stop_event: threading.Event, poll: float = 0.05) -> int:
+                       stop_event: threading.Event, poll: float = 0.05,
+                       deferred: int = 0,
+                       deadline_at: Optional[float] = None) -> int:
         """Block until >= min_entries consecutive committed entries exist at
         the persistent tail, or a drain/stop is requested.  Returns the run
-        length found (0 if stopping)."""
+        length found (0 if stopping).
+
+        ``deferred`` entries at the tail were intentionally held back by the
+        drain's batch-spanning coalescer: they alone are not "new work", so
+        the wait ignores them until either fresh entries commit behind them
+        (``run > deferred``), the carried extent's ``deadline_at``
+        (monotonic seconds) expires, or a drain/stop is requested — the
+        three events that close the open tail extent."""
         while True:
             run = self.committed_run(self.persistent_tail, self.policy.batch_max)
-            if run >= min_entries or (run > 0 and drain_event.is_set()):
-                return run
+            if run > 0:
+                if drain_event.is_set():
+                    return run
+                if run >= min_entries and run > deferred:
+                    return run
+                if deadline_at is not None and time.monotonic() >= deadline_at:
+                    return run
             if stop_event.is_set():
                 return run
+            timeout = poll
+            if deadline_at is not None:
+                timeout = min(poll, max(0.0, deadline_at - time.monotonic()))
             with self._committed:
-                self._committed.wait(timeout=poll)
+                self._committed.wait(timeout=max(1e-4, timeout))
 
     def consume(self, start: int, count: int) -> None:
         """Durably retire ``count`` entries at ``start`` (== persistent tail).

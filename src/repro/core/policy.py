@@ -56,6 +56,23 @@ class Policy:
     coalesce_max_extent: int = MIB     # max bytes per coalesced extent write
     fsync_epoch: bool = True           # merge concurrent per-shard fsyncs of
     #                                    the same backend file into epochs
+    # batch-spanning coalescing (cf. NVLog keeping its tail extent open
+    # across syncs): a drain batch may leave its contiguous tail extent
+    # (capped at one page-span of bytes) unconsumed so the next batch's
+    # contiguous entries merge into the same backend write.  Deferred
+    # entries stay committed in the log with their dirty-page-index refs
+    # live, and are force-flushed once they are older than the deadline or
+    # whenever a drain barrier (close/flush/fsync) is requested.
+    coalesce_span_batches: bool = True  # carry the open tail extent across
+    #                                     batches (requires drain_coalesce)
+    coalesce_deadline_ms: float = 5.0   # max age of a carried tail extent
+    # read path (the read-side twin of the drain engine, paper Fig. 2 miss
+    # procedure generalized from one page to one aligned extent): a cache
+    # miss loads up to ``readahead_pages`` pages in a single backend
+    # operation (``TierFile.preadv``).  1 == the paper's per-page miss.
+    # The effective extent is clamped to half the read cache so readahead
+    # can never flush the cache it feeds.
+    readahead_pages: int = 8
 
     def __post_init__(self):
         if self.page_size & (self.page_size - 1):
@@ -71,6 +88,10 @@ class Policy:
         if self.coalesce_max_extent < self.page_size:
             raise ValueError("coalesce_max_extent must be >= page_size "
                              "(extents never split a page's merged range)")
+        if self.readahead_pages < 1:
+            raise ValueError("readahead_pages must be >= 1")
+        if self.coalesce_deadline_ms < 0:
+            raise ValueError("coalesce_deadline_ms must be >= 0")
         per = self.log_entries // self.shards
         if per < 2:
             raise ValueError("each shard needs at least 2 entries")
@@ -129,6 +150,8 @@ PAPER_DEFAULT = Policy(
     batch_max=10000,
     drain_coalesce=False,
     fsync_epoch=False,
+    coalesce_span_batches=False,
+    readahead_pages=1,
 )
 
 #: Small configuration for unit/property tests.

@@ -69,7 +69,7 @@ class PageDesc:
     """
 
     __slots__ = ("page_no", "atomic_lock", "cleanup_lock", "ref_lock",
-                 "entries", "content", "accessed")
+                 "entries", "content", "accessed", "prefetched")
 
     def __init__(self, page_no: int):
         self.page_no = page_no
@@ -79,6 +79,7 @@ class PageDesc:
         self.entries: list = []                # live EntryRefs, seq order
         self.content: Optional[PageContent] = None
         self.accessed = False
+        self.prefetched = False                # loaded by readahead, unread
 
     def add_ref(self, ref) -> None:
         """Write path: register a just-committed entry on this page."""
@@ -161,6 +162,24 @@ class RadixTree:
                 node[slot] = PageDesc(key)
             return node[slot]
 
+    def iter_descs(self):
+        """Every descriptor currently in the tree (ascending page order).
+
+        Safe under the GIL concurrently with inserts (nodes are fixed-size
+        lists mutated by slot assignment); descriptors inserted during the
+        walk may or may not be yielded — callers that need a fixed point
+        (e.g. the O_TRUNC purge) serialize writers at a higher level.
+        """
+        def walk(node, depth):
+            for child in node:
+                if child is None:
+                    continue
+                if depth == 1:
+                    yield child
+                else:
+                    yield from walk(child, depth - 1)
+        yield from walk(self._root, self._height)
+
 
 class LRUCache:
     """Second-chance LRU over page contents (paper §II-D).
@@ -181,35 +200,85 @@ class LRUCache:
         self.stats_misses = 0
 
     def acquire_buffer(self) -> PageContent:
-        """Return a free page buffer, evicting if at capacity."""
+        """Return a free page buffer, evicting if at capacity.
+
+        Overflow allocations (taken when every victim is pinned) ratchet
+        ``_allocated`` above ``capacity``; each later acquire makes one
+        opportunistic shrink attempt, so the pool converges back to its
+        bound once the pinning burst is over."""
+        content = self._acquire_one()
+        self._shrink_one()
+        return content
+
+    def _pop_victim(self) -> tuple:
+        """One step of the second-chance protocol: pop a queue entry and
+        try to detach it.  Returns ``(status, content)`` where status is
+        ``"empty"`` (queue exhausted), ``"free"``/``"evicted"`` (content is
+        a usable buffer), or ``"busy"``/``"hot"`` (victim skipped and
+        requeued)."""
+        with self._lock:
+            if not self._queue:
+                return "empty", None
+            content = self._queue.popleft()
+            desc = content.desc
+            if desc is None:                   # already detached
+                return "free", content
+            if not desc.atomic_lock.acquire(blocking=False):
+                self._queue.append(content)
+                return "busy", None
+        try:
+            if desc.accessed:                  # second chance
+                desc.accessed = False
+                with self._lock:
+                    self._queue.append(content)
+                return "hot", None
+            desc.content = None                # -> unloaded-{clean,dirty}
+            content.desc = None
+            self.stats_evictions += 1
+            return "evicted", content
+        finally:
+            desc.atomic_lock.release()
+
+    def _acquire_one(self) -> PageContent:
         with self._lock:
             if self._allocated < self.capacity:
                 self._allocated += 1
                 return PageContent(self.page_size)
-        while True:
-            with self._lock:
-                if not self._queue:
-                    self._allocated += 1       # everything pinned: overflow
-                    return PageContent(self.page_size)
-                content = self._queue.popleft()
-                desc = content.desc
-                if desc is None:               # already detached
-                    return content
-                if not desc.atomic_lock.acquire(blocking=False):
-                    self._queue.append(content)
-                    continue
-            try:
-                if desc.accessed:              # second chance
-                    desc.accessed = False
-                    with self._lock:
-                        self._queue.append(content)
-                    continue
-                desc.content = None            # -> unloaded-{clean,dirty}
-                content.desc = None
-                self.stats_evictions += 1
+            scans = 2 * len(self._queue) + 4   # two second-chance passes
+        while scans > 0:
+            status, content = self._pop_victim()
+            if status == "empty":
+                break
+            if content is not None:
                 return content
-            finally:
-                desc.atomic_lock.release()
+            scans -= 1
+        # everything pinned (or busy-locked by this very caller, e.g. an
+        # extent load holding its pages' atomic locks): overflow rather
+        # than livelock on our own locks
+        with self._lock:
+            self._allocated += 1
+        return PageContent(self.page_size)
+
+    def _shrink_one(self) -> None:
+        """Drop one reclaimable buffer while over capacity (see
+        :meth:`acquire_buffer`); a no-op at or under the bound."""
+        with self._lock:
+            if self._allocated <= self.capacity:
+                return
+        _status, content = self._pop_victim()
+        if content is not None:                # dropped, not reused
+            with self._lock:
+                self._allocated -= 1
+
+    def acquire_buffers(self, count: int) -> list:
+        """``count`` free page buffers for a multi-page (extent) load.
+
+        Safe to call while holding the atomic locks of the pages about to
+        be loaded: eviction try-locks victims and the bounded scan in
+        :meth:`acquire_buffer` falls back to overflow allocation instead of
+        spinning on the caller's own locked pages.
+        """
+        return [self.acquire_buffer() for _ in range(count)]
 
     def attach(self, desc: PageDesc, content: PageContent) -> None:
         content.desc = desc

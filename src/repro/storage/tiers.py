@@ -108,6 +108,10 @@ class TierFile:
         self.stats_page_writes = 0    # pages touched by write calls (the
         #                               drain-coalescing figure of merit)
         self.stats_wvec_segments = 0  # iovec segments across pwritev calls
+        self.stats_preads = 0         # read syscalls (pread + preadv calls —
+        #                               the readahead figure of merit)
+        self.stats_page_reads = 0     # uncached pages paid at device cost
+        self.stats_rvec_segments = 0  # iovec segments across preadv calls
 
     # -- data plane ---------------------------------------------------------
     def pwrite(self, data: bytes, off: int) -> int:
@@ -176,7 +180,40 @@ class TierFile:
             pages = range(off // PAGE, (off + max(n, 1) - 1) // PAGE + 1)
             misses = [p for p in pages if p not in self._cached_pages]
             self._cached_pages.update(misses)
+        self.stats_preads += 1
+        self.stats_page_reads += len(misses)
         self.gate.charge(self.device.syscall_s + len(misses) * self.device.page_read_s)
+        return out
+
+    def preadv(self, iov) -> list:
+        """Vectored read: ``iov`` is an iterable of ``(n, off)``; returns the
+        list of chunks (short chunks past EOF, like ``pread``).
+
+        One syscall's worth of overhead for the whole vector plus a small
+        per-extra-segment cost (``iov_seg_s``) plus device cost per
+        *uncached* page — the extent/vectored cost model the readahead miss
+        path is measured against.  Page-cache accounting is identical to
+        issuing the segments individually.
+        """
+        out = []
+        nseg = 0
+        misses = 0
+        with self._lock:
+            for n, off in iov:
+                out.append(bytes(self._data[off:off + n]))
+                if n <= 0:
+                    continue
+                nseg += 1
+                pages = range(off // PAGE, (off + n - 1) // PAGE + 1)
+                miss = [p for p in pages if p not in self._cached_pages]
+                misses += len(miss)
+                self._cached_pages.update(miss)
+        self.stats_preads += 1
+        self.stats_page_reads += misses
+        self.stats_rvec_segments += nseg
+        self.gate.charge(self.device.syscall_s
+                         + max(0, nseg - 1) * self.device.iov_seg_s
+                         + misses * self.device.page_read_s)
         return out
 
     def fsync(self) -> None:
@@ -189,6 +226,14 @@ class TierFile:
             self._dirty_pages.clear()
         self.gate.charge(self.device.fsync_base_s + npages * self.device.page_write_s
                          + self.device.syscall_s)
+
+    def drop_page_cache(self) -> None:
+        """Evict this file's clean pages from the modeled kernel page cache
+        (the per-file half of ``echo 3 > drop_caches``) — cold-read
+        benchmarks use it so reads pay device cost.  Dirty pages stay: the
+        kernel cannot drop them before writeback."""
+        with self._lock:
+            self._cached_pages &= self._dirty_pages
 
     def size(self) -> int:
         with self._lock:
@@ -234,7 +279,18 @@ class Tier:
             return f
 
     def exists(self, path: str) -> bool:
-        return path in self._files
+        with self._lock:
+            return path in self._files
+
+    def size_of(self, path: str) -> int:
+        """Size of an existing file WITHOUT creating it on miss — the
+        non-mutating stat path (``Tier.open`` inserts on miss, which a
+        stat of a nonexistent path must never do)."""
+        with self._lock:
+            f = self._files.get(path)
+        if f is None:
+            raise FileNotFoundError(path)
+        return f.size()
 
     def unlink(self, path: str) -> None:
         with self._lock:

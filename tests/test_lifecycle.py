@@ -1,0 +1,399 @@
+"""File-lifecycle bug-cluster regression tests (PR 3 satellites).
+
+Each test here failed before its fix:
+
+* ``open(O_TRUNC)`` truncated only the backend, leaving the file's
+  undrained log entries, dirty-page-index refs and loaded page contents
+  alive — a later drain resurrected pre-truncate bytes and cached reads
+  served stale data (worse after a crash: recovery replayed them).
+* ``stat_size(path)`` on an unopened path called ``Tier.open``, which
+  *creates* an empty phantom file — stat of a nonexistent file mutated
+  the namespace.
+* ``write`` with ``O_APPEND`` reserved ``size = off + len(data)`` before
+  the log append; a failed append left the size inflated forever, so
+  readers got zero-filled bytes that were never written.
+* ``close()`` raised on drain timeout *before* decrementing the refcount,
+  permanently leaking the ``File``, its fdid slot and its NVMM fd-table
+  entry.
+"""
+import os
+import random
+
+import pytest
+
+from repro.core import NVCache, Policy, recover
+from repro.core import api as api_mod
+from repro.core.log import LogFullTimeout
+from repro.storage.tiers import DRAM, Tier
+
+POL = Policy(entry_size=256, log_entries=128, page_size=256,
+             read_cache_pages=8, batch_min=4, batch_max=16)
+# nothing drains on its own (batch_min clamps to entries_per_shard // 2),
+# so undrained state survives until a barrier forces it — the worst case
+# for the truncate bug
+POL_NODRAIN = Policy(entry_size=256, log_entries=128, page_size=256,
+                     read_cache_pages=8, batch_min=10 ** 6, batch_max=10 ** 6)
+
+O_TRUNCW = os.O_RDWR | os.O_CREAT | os.O_TRUNC
+
+
+# ------------------------------------------------------------------ O_TRUNC
+def test_otrunc_does_not_resurrect_undrained_bytes():
+    """write -> reopen with O_TRUNC -> drain -> read must yield zeros; the
+    old code drained the pre-truncate entries *after* the backend truncate
+    and brought the bytes back."""
+    tier = Tier(DRAM)
+    nv = NVCache(POL_NODRAIN, tier)
+    fd = nv.open("/f")
+    nv.pwrite(fd, b"\xAA" * 700, 0)          # sits undrained in the log
+    assert nv.log.used_entries > 0
+    fd2 = nv.open("/f", O_TRUNCW)
+    assert nv.stat_size(fd2) == 0
+    nv.flush()                               # the drain that used to resurrect
+    assert nv.pread(fd2, 700, 0) == b""      # size is 0
+    nv.pwrite(fd2, b"b", 650)                # extend: holes must read as zero
+    assert nv.pread(fd2, 651, 0) == b"\x00" * 650 + b"b"
+    snap = tier.open("/f").snapshot()
+    assert not any(snap[:650]), "pre-truncate bytes resurrected in backend"
+    nv.shutdown()
+
+
+def test_otrunc_invalidates_cached_page_contents():
+    """A page loaded in the read cache before O_TRUNC must not serve the
+    pre-truncate bytes afterwards."""
+    tier = Tier(DRAM)
+    nv = NVCache(POL, tier)
+    fd = nv.open("/f")
+    nv.pwrite(fd, b"\xBB" * 256, 0)
+    nv.flush()
+    assert nv.pread(fd, 256, 0) == b"\xBB" * 256   # page now loaded
+    fd2 = nv.open("/f", O_TRUNCW)
+    nv.pwrite(fd2, b"c", 200)                # same page, post-truncate
+    assert nv.pread(fd2, 201, 0) == b"\x00" * 200 + b"c"
+    nv.shutdown()
+
+
+def test_otrunc_with_crash_and_recovery_yields_zeros():
+    """Crash after the O_TRUNC open: recovery must NOT replay pre-truncate
+    entries (they were durably consumed by the truncate's drain)."""
+    tier = Tier(DRAM)
+    nv = NVCache(POL_NODRAIN, tier, track_crashes=True)
+    fd = nv.open("/f")
+    nv.pwrite(fd, b"\xAA" * 700, 0)
+    fd2 = nv.open("/f", O_TRUNCW)
+    nv.pwrite(fd2, b"new", 10)               # post-truncate write, undrained
+    nvmm = nv.crash()
+    tier2 = Tier(DRAM)
+    for path in tier.paths():
+        snap = tier.open(path).snapshot()
+        if snap:
+            tier2.open(path).pwrite(snap, 0)
+    recover(nvmm, POL_NODRAIN, tier2.open)
+    got = tier2.open("/f").snapshot()
+    assert got[10:13] == b"new"
+    assert not any(got[:10]) and not any(got[13:]), \
+        "recovery resurrected pre-truncate bytes"
+    nv2 = NVCache(POL_NODRAIN, tier2)
+    fd3 = nv2.open("/f")
+    assert nv2.pread(fd3, 700, 0)[:13] == b"\x00" * 10 + b"new"
+    nv2.shutdown()
+
+
+def test_otrunc_readonly_open_does_not_truncate():
+    tier = Tier(DRAM)
+    nv = NVCache(POL, tier)
+    fd = nv.open("/f")
+    nv.pwrite(fd, b"keep", 0)
+    fd2 = nv.open("/f", os.O_RDONLY | os.O_TRUNC)   # POSIX: undefined, we keep
+    assert nv.pread(fd2, 4, 0) == b"keep"
+    nv.shutdown()
+
+
+# ---------------------------------------------------------------- stat_size
+def test_stat_of_nonexistent_path_raises_and_creates_nothing():
+    tier = Tier(DRAM)
+    nv = NVCache(POL, tier)
+    with pytest.raises(FileNotFoundError):
+        nv.stat_size("/never-opened")
+    assert not tier.exists("/never-opened"), "stat created a phantom file"
+    assert tier.paths() == []
+    # an existing-but-unopened backend file still stats fine
+    tier.open("/on-disk").pwrite(b"12345", 0)
+    assert nv.stat_size("/on-disk") == 5
+    # and an open file stats from user space (in-flight writes included)
+    fd = nv.open("/f")
+    nv.pwrite(fd, b"x" * 999, 0)
+    assert nv.stat_size("/f") == 999
+    nv.shutdown()
+
+
+def test_tier_size_of_is_non_creating():
+    tier = Tier(DRAM)
+    with pytest.raises(FileNotFoundError):
+        tier.size_of("/nope")
+    assert not tier.exists("/nope")
+    tier.open("/yes").pwrite(b"abc", 0)
+    assert tier.size_of("/yes") == 3
+
+
+# ----------------------------------------------------------------- O_APPEND
+def test_failed_append_rolls_back_size_reservation(monkeypatch):
+    tier = Tier(DRAM)
+    nv = NVCache(POL, tier)
+    fd = nv.open("/f", os.O_RDWR | os.O_CREAT | os.O_APPEND)
+    nv.write(fd, b"base")
+    nv.flush()
+
+    def full(*a, **kw):
+        raise LogFullTimeout("shard 0 full")
+    monkeypatch.setattr(nv.log, "append", full)
+    with pytest.raises(LogFullTimeout):
+        nv.write(fd, b"lost-forever")
+    monkeypatch.undo()
+    # the reservation must be gone: size and reads unchanged...
+    assert nv.stat_size(fd) == 4
+    assert nv.pread(fd, 100, 0) == b"base"
+    # ...and the next append lands at the pre-failure offset, not after a
+    # zero-filled hole
+    nv.write(fd, b"+tail")
+    assert nv.pread(fd, 100, 0) == b"base+tail"
+    nv.shutdown()
+
+
+def test_failed_append_rollback_yields_to_concurrent_reservation(monkeypatch):
+    """If another append reserved past ours before we rolled back, the
+    rollback must not clobber that later reservation."""
+    tier = Tier(DRAM)
+    nv = NVCache(POL, tier)
+    fd = nv.open("/f", os.O_RDWR | os.O_CREAT | os.O_APPEND)
+
+    def fail_then_sneak(*a, **kw):
+        monkeypatch.undo()
+        # a concurrent appender wins the race while our append is failing
+        with nv._files["/f"].size_lock:
+            nv._files["/f"].size += 7
+        raise LogFullTimeout("shard 0 full")
+    monkeypatch.setattr(nv.log, "append", fail_then_sneak)
+    with pytest.raises(LogFullTimeout):
+        nv.write(fd, b"xyz")
+    assert nv.stat_size(fd) == 3 + 7, "rollback clobbered a later reservation"
+    nv.shutdown()
+
+
+def test_failed_append_rollback_respects_concurrent_pwrite(monkeypatch):
+    """A pwrite that lands inside the failed append's reserved range leaves
+    f.size untouched (it doesn't extend the file) — the rollback must not
+    shrink the size below those durably committed bytes."""
+    tier = Tier(DRAM)
+    nv = NVCache(POL, tier)
+    fd = nv.open("/f", os.O_RDWR | os.O_CREAT | os.O_APPEND)
+    nv.write(fd, b"base")
+    fd2 = nv.open("/f")
+
+    def fail_after_other_write(*a, **kw):
+        monkeypatch.undo()                   # no page locks held here yet
+        nv.pwrite(fd2, b"ZZZ", 4)            # commits exactly [4, 7)
+        raise LogFullTimeout("shard 0 full")
+    monkeypatch.setattr(nv, "_pwrite_split", fail_after_other_write)
+    with pytest.raises(LogFullTimeout):
+        nv.write(fd, b"xyz")                 # reserves [4, 7), then fails
+    assert nv.stat_size(fd) == 7, "rollback hid a committed concurrent write"
+    assert nv.pread(fd, 10, 0) == b"baseZZZ"
+    nv.shutdown()
+
+
+def test_partially_committed_append_keeps_committed_prefix_visible():
+    """A split append (stripe-crossing) that fails midway must roll the
+    size back only to the committed prefix: those bytes are durable in the
+    log, and a smaller size would resurrect them as bytes-past-EOF after
+    crash+recovery."""
+    pol = Policy(entry_size=256, log_entries=256, page_size=256,
+                 read_cache_pages=8, batch_min=10 ** 6, batch_max=10 ** 6,
+                 shards=2, shard_route="stripe", stripe_pages=1)
+    tier = Tier(DRAM)
+    nv = NVCache(pol, tier, track_crashes=True)
+    fd = nv.open("/f", os.O_RDWR | os.O_CREAT | os.O_APPEND)
+    nv.write(fd, b"A" * 100)
+    calls = [0]
+    real_op = nv._pwrite_op
+
+    def flaky(f, data, off):
+        calls[0] += 1
+        if calls[0] > 1:                     # first op commits, second fails
+            raise LogFullTimeout("shard full")
+        return real_op(f, data, off)
+    nv._pwrite_op = flaky
+    with pytest.raises(LogFullTimeout):
+        nv.write(fd, b"B" * 300)             # [100,256) commits, [256,...) fails
+    nv._pwrite_op = real_op
+    assert calls[0] == 2
+    # size reflects exactly the committed prefix, not 0 and not 400
+    assert nv.stat_size(fd) == 256
+    assert nv.pread(fd, 400, 0) == b"A" * 100 + b"B" * 156
+    # crash+recovery agrees: nothing beyond the reported size
+    nvmm = nv.crash()
+    tier2 = Tier(DRAM)
+    recover(nvmm, pol, tier2.open)
+    got = tier2.open("/f").snapshot()
+    assert got[:256] == b"A" * 100 + b"B" * 156
+    assert not any(got[256:]), "durable bytes hidden past the rolled-back size"
+
+
+# -------------------------------------------------------------------- close
+def test_close_releases_descriptor_even_when_drain_times_out(monkeypatch):
+    tier = Tier(DRAM)
+    nv = NVCache(POL, tier)
+    fd = nv.open("/f")
+    nv.pwrite(fd, b"d" * 100, 0)
+    nv.flush()
+    free_before = len(nv._fdid_free)
+    monkeypatch.setattr(api_mod.File, "wait_drained",
+                        lambda self, timeout=None: False)
+    with pytest.raises(TimeoutError):
+        nv.close(fd)
+    monkeypatch.undo()
+    # the barrier failed, but the descriptor must be fully torn down:
+    assert fd not in nv._open
+    assert "/f" not in nv._files, "File leaked after failed close"
+    assert not nv._by_fdid, "fdid table entry leaked"
+    assert len(nv._fdid_free) == free_before + 1, "fdid slot leaked"
+    # the path is reusable and gets a fresh file table entry
+    fd2 = nv.open("/f")
+    assert nv.pread(fd2, 100, 0) == b"d" * 100
+    nv.close(fd2)
+    nv.shutdown()
+
+
+def test_close_timeout_with_pending_entries_never_orphans_them(monkeypatch):
+    """If the drain barrier times out while committed entries are still
+    undrained, the fd closes but the File/fdid must stay registered and
+    resolvable — retiring the fdid would make the drain drop the entries
+    as orphans (or route them into whatever file reuses the fdid)."""
+    tier = Tier(DRAM)
+    nv = NVCache(POL_NODRAIN, tier)          # drains only on request
+    fd = nv.open("/f")
+    nv.pwrite(fd, b"A" * 500, 0)
+    f = nv._files["/f"]
+    fdid = f.fdid
+    monkeypatch.setattr(api_mod.File, "wait_drained",
+                        lambda self, timeout=None: False)
+    with pytest.raises(TimeoutError):
+        nv.close(fd)
+    monkeypatch.undo()
+    assert fd not in nv._open                # the descriptor is closed...
+    assert nv._files.get("/f") is f          # ...but the File stays live
+    assert nv._by_fdid.get(fdid) is f, "drain can no longer resolve fdid"
+    assert fdid not in nv._fdid_free, "fdid freed with entries in flight"
+    nv.flush()                               # the entries eventually land...
+    assert f.pending.get() == 0
+    assert tier.open("/f").snapshot()[:500] == b"A" * 500, "bytes orphaned"
+    # ...and the flush sweep retires the drained orphan (no residual leak)
+    assert "/f" not in nv._files
+    assert fdid in nv._fdid_free
+    fd2 = nv.open("/f")                      # the path works again
+    assert nv.pread(fd2, 500, 0) == b"A" * 500
+    nv.close(fd2)
+    nv.shutdown()
+
+
+def test_orphaned_file_is_adopted_by_reopen_before_any_flush(monkeypatch):
+    tier = Tier(DRAM)
+    nv = NVCache(POL_NODRAIN, tier)
+    fd = nv.open("/f")
+    nv.pwrite(fd, b"B" * 200, 0)
+    f = nv._files["/f"]
+    monkeypatch.setattr(api_mod.File, "wait_drained",
+                        lambda self, timeout=None: False)
+    with pytest.raises(TimeoutError):
+        nv.close(fd)
+    monkeypatch.undo()
+    fd2 = nv.open("/f")                      # adopts the orphan, refs 0 -> 1
+    assert nv._files["/f"] is f
+    assert nv.pread(fd2, 200, 0) == b"B" * 200
+    nv.close(fd2)                            # normal close retires it
+    assert "/f" not in nv._files
+    nv.shutdown()
+
+
+def test_open_otrunc_unwinds_fd_on_drain_timeout(monkeypatch):
+    tier = Tier(DRAM)
+    nv = NVCache(POL, tier)
+    fd = nv.open("/f")
+    nv.pwrite(fd, b"x" * 100, 0)
+    nv.flush()
+    nv.close(fd)
+    monkeypatch.setattr(api_mod.File, "wait_drained",
+                        lambda self, timeout=None: False)
+    with pytest.raises(TimeoutError):
+        nv.open("/f", O_TRUNCW)
+    monkeypatch.undo()
+    assert not nv._open, "O_TRUNC open leaked its fd on failure"
+    assert "/f" not in nv._files
+    fd2 = nv.open("/f")                      # the path still works afterwards
+    assert nv.pread(fd2, 100, 0) == b"x" * 100   # truncate never happened
+    nv.close(fd2)
+    nv.shutdown()
+
+
+def test_close_with_multiple_refs_keeps_file_on_timeout(monkeypatch):
+    tier = Tier(DRAM)
+    nv = NVCache(POL, tier)
+    fd1 = nv.open("/f")
+    fd2 = nv.open("/f")
+    monkeypatch.setattr(api_mod.File, "wait_drained",
+                        lambda self, timeout=None: False)
+    with pytest.raises(TimeoutError):
+        nv.close(fd1)
+    monkeypatch.undo()
+    assert "/f" in nv._files and nv._files["/f"].refs == 1
+    nv.pwrite(fd2, b"still-works", 0)
+    assert nv.pread(fd2, 11, 0) == b"still-works"
+    nv.close(fd2)
+    assert "/f" not in nv._files
+    nv.shutdown()
+
+
+# ---------------------------------------------- randomized lifecycle + crash
+def test_random_lifecycle_with_crash_recovers_exactly():
+    """Random pwrite/append/truncate sequences, then a crash: surviving
+    backend bytes + NVMM replay must equal the in-order application of the
+    surviving (post-truncate) operations."""
+    for trial in range(12):
+        rng = random.Random(7100 + trial)
+        pol = Policy(entry_size=256, log_entries=256, page_size=256,
+                     read_cache_pages=8, batch_min=2, batch_max=8,
+                     shards=1 + (trial % 2))
+        tier = Tier(DRAM)
+        nv = NVCache(pol, tier, track_crashes=True)
+        fd = nv.open("/f")
+        afd = nv.open("/f", os.O_RDWR | os.O_CREAT | os.O_APPEND)
+        img = bytearray()
+        for _ in range(rng.randint(5, 20)):
+            op = rng.random()
+            if op < 0.5:
+                off = rng.randrange(0, 900)
+                data = bytes([rng.randrange(1, 256)]) * rng.randint(1, 300)
+                nv.pwrite(fd, data, off)
+                if off + len(data) > len(img):
+                    img.extend(b"\x00" * (off + len(data) - len(img)))
+                img[off:off + len(data)] = data
+            elif op < 0.8:
+                data = bytes([rng.randrange(1, 256)]) * rng.randint(1, 200)
+                nv.write(afd, data)
+                img.extend(data)
+            else:
+                fdt = nv.open("/f", O_TRUNCW)
+                nv.close(fdt)
+                img = bytearray()
+        nvmm = nv.crash()
+        tier2 = Tier(DRAM)
+        for path in tier.paths():
+            snap = tier.open(path).snapshot()
+            if snap:
+                tier2.open(path).pwrite(snap, 0)
+        stats = recover(nvmm, pol, tier2.open)
+        assert stats.crc_failures == 0
+        got = tier2.open("/f").snapshot()
+        assert got[:len(img)] == bytes(img), f"trial {trial}: wrong bytes"
+        assert not any(got[len(img):]), \
+            f"trial {trial}: stale bytes past the truncated size"

@@ -109,6 +109,118 @@ def test_nvcache_matches_posix_reference(ops):
         nv.shutdown()
 
 
+lifecycle_ops_st = st.lists(st.one_of(
+    st.tuples(st.just("pwrite"), st.integers(0, 600),
+              st.binary(min_size=1, max_size=300)),
+    st.tuples(st.just("pread"), st.integers(0, 700), st.integers(1, 300)),
+    st.tuples(st.just("append"), st.binary(min_size=1, max_size=200)),
+    st.tuples(st.just("truncate"),),
+    st.tuples(st.just("stat"),),
+    st.tuples(st.just("stat_missing"),),
+    st.tuples(st.just("flush"),),
+    st.tuples(st.just("reopen"),),
+), min_size=1, max_size=25)
+
+
+@settings(max_examples=40, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ops=lifecycle_ops_st)
+def test_lifecycle_ops_match_posix_reference(ops):
+    """The PR-3 lifecycle surface (O_TRUNC reopen, O_APPEND writes, stat of
+    open/unopened/missing paths, close/reopen) under random interleavings
+    against the in-memory oracle."""
+    tier = Tier(DRAM)
+    nv = NVCache(POL, tier)
+    ref = RefFile()
+    fd = nv.open("/f")
+    missing = 0
+    try:
+        for op in ops:
+            if op[0] == "pwrite":
+                _, off, data = op
+                nv.pwrite(fd, data, off)
+                ref.pwrite(data, off)
+            elif op[0] == "pread":
+                _, off, n = op
+                assert nv.pread(fd, n, off) == ref.pread(n, off), op
+            elif op[0] == "append":
+                afd = nv.open("/f", os.O_RDWR | os.O_CREAT | os.O_APPEND)
+                nv.write(afd, op[1])
+                ref.pwrite(op[1], len(ref.data))
+                nv.close(afd)
+            elif op[0] == "truncate":
+                tfd = nv.open("/f", os.O_RDWR | os.O_CREAT | os.O_TRUNC)
+                ref.data = bytearray()
+                nv.close(tfd)
+            elif op[0] == "stat":
+                assert nv.stat_size(fd) == len(ref.data)
+                assert nv.stat_size("/f") == len(ref.data)
+            elif op[0] == "stat_missing":
+                missing += 1
+                path = f"/missing-{missing}"
+                try:
+                    nv.stat_size(path)
+                    raise AssertionError("stat of a missing path succeeded")
+                except FileNotFoundError:
+                    pass
+                assert not tier.exists(path), "stat created a phantom file"
+            elif op[0] == "flush":
+                nv.flush()
+            elif op[0] == "reopen":
+                nv.close(fd)
+                fd = nv.open("/f")
+        assert nv.pread(fd, len(ref.data) + 10, 0) == bytes(ref.data)
+        nv.flush()
+        snap = tier.open("/f").snapshot()
+        assert snap[:len(ref.data)] == bytes(ref.data)
+        assert not any(snap[len(ref.data):]), "stale bytes past truncation"
+    finally:
+        nv.shutdown()
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ops=lifecycle_ops_st, crash_seed=st.integers(0, 2 ** 30))
+def test_lifecycle_ops_crash_recovery(ops, crash_seed):
+    """Same op mix, then power loss: recovery must reproduce the oracle —
+    in particular it must never resurrect pre-truncate bytes."""
+    import random
+    from repro.core import recover
+    tier = Tier(DRAM)
+    nv = NVCache(POL, tier, track_crashes=True)
+    ref = RefFile()
+    fd = nv.open("/f")
+    for op in ops:
+        if op[0] == "pwrite":
+            _, off, data = op
+            nv.pwrite(fd, data, off)
+            ref.pwrite(data, off)
+        elif op[0] == "append":
+            afd = nv.open("/f", os.O_RDWR | os.O_CREAT | os.O_APPEND)
+            nv.write(afd, op[1])
+            ref.pwrite(op[1], len(ref.data))
+            nv.close(afd)
+        elif op[0] == "truncate":
+            tfd = nv.open("/f", os.O_RDWR | os.O_CREAT | os.O_TRUNC)
+            ref.data = bytearray()
+            nv.close(tfd)
+        elif op[0] == "flush":
+            nv.flush()
+        # read-only/stat ops don't change the durable image: skip
+    rng = random.Random(crash_seed)
+    nvmm = nv.crash(choose_evicted=lambda lines: [
+        l for l in lines if rng.random() < 0.5])
+    tier2 = Tier(DRAM)
+    for path in tier.paths():
+        snap = tier.open(path).snapshot()
+        if snap:
+            tier2.open(path).pwrite(snap, 0)
+    recover(nvmm, POL, tier2.open)
+    got = tier2.open("/f").snapshot()
+    assert got[:len(ref.data)] == bytes(ref.data)
+    assert not any(got[len(ref.data):]), "recovery resurrected stale bytes"
+
+
 def test_flock_unlock_flushes():
     tier = Tier(DRAM)
     nv = NVCache(POL, tier)

@@ -1,0 +1,296 @@
+"""Extent-granular read path with readahead (PR 3 tentpole, read side).
+
+A cache miss loads an aligned extent of ``Policy.readahead_pages`` in one
+backend operation (``TierFile.preadv``); every covered page still goes
+through the dirty-page-index replay, so readahead can never bypass
+durable-linearizability (``NVLog.stats_full_scans`` stays 0 and the replay
+stays O(entries-on-page)).
+"""
+import struct
+import threading
+
+import pytest
+
+from repro.core import NVCache, Policy
+from repro.storage.tiers import DRAM, PAGE, SSD_SATA, Tier
+
+
+def make_policy(**kw) -> Policy:
+    defaults = dict(entry_size=256, log_entries=256, page_size=256,
+                    read_cache_pages=64, batch_min=4, batch_max=16)
+    defaults.update(kw)
+    return Policy(**defaults)
+
+
+# ------------------------------------------------------------ op reduction
+def test_cold_sequential_read_uses_fewer_backend_ops():
+    """The acceptance shape: readahead=8 must issue >= 2x fewer backend
+    read syscalls than readahead=1 on a cold sequential scan (~8x: the
+    first miss is a single-page probe, the second opens the window)."""
+    NP = 64
+    ops = {}
+    for ra in (1, 8):
+        pol = make_policy(readahead_pages=ra, read_cache_pages=128)
+        tier = Tier(DRAM)
+        tier.open("/f").pwrite(bytes(range(256)) * NP, 0)
+        nv = NVCache(pol, tier)
+        fd = nv.open("/f")
+        for p in range(NP):
+            assert nv.pread(fd, 256, p * 256) == bytes(range(256))
+        ops[ra] = tier.open("/f").stats_preads
+        s = nv.stats()
+        assert s["log_full_scans"] == 0
+        if ra == 8:
+            # miss 0 probes one page; miss 1 is sequential and loads the
+            # rest of window [0, 8); then one extent load per window
+            assert s["lru_misses"] == 2 + (NP - 8) // 8
+            assert s["readahead_loads"] == 1 + (NP - 8) // 8
+            assert s["readahead_pages"] == NP - s["lru_misses"]
+            assert s["readahead_hits"] == s["readahead_pages"]  # all used
+        nv.shutdown()
+    assert ops[1] == 64
+    assert ops[8] == 9, f"extent loads not batched: {ops}"
+
+
+def test_random_misses_do_not_open_the_readahead_window():
+    """A non-sequential miss loads only its own page — random workloads
+    must not pay device cost for prefetches they will evict unused."""
+    pol = make_policy(readahead_pages=8, read_cache_pages=128)
+    tier = Tier(DRAM)
+    tier.open("/f").pwrite(b"r" * (64 * 256), 0)
+    nv = NVCache(pol, tier)
+    fd = nv.open("/f")
+    for p in (40, 3, 17, 60, 9, 33):          # no two sequential
+        assert nv.pread(fd, 256, p * 256) == b"r" * 256
+    tf = tier.open("/f")
+    assert tf.stats_preads == 6
+    assert tf.stats_page_reads == 0           # DRAM tier: cached by prefill
+    assert nv.stats()["readahead_loads"] == 0
+    assert nv.stats()["lru_misses"] == 6
+    nv.shutdown()
+
+
+def test_readahead_skips_already_cached_pages():
+    """Pages already loaded inside the extent window are not re-read: the
+    iovec segments cover only the uncached runs."""
+    pol = make_policy(readahead_pages=8, read_cache_pages=128)
+    tier = Tier(DRAM)
+    tier.open("/f").pwrite(b"q" * (8 * 256), 0)
+    nv = NVCache(pol, tier)
+    fd = nv.open("/f")
+    nv.pread(fd, 1, 0)              # probe: loads page 0 alone
+    nv.pread(fd, 1, 256)            # sequential miss: loads window [0, 8)
+    f = nv._files["/f"]
+    assert all(f.radix.get(p).content is not None for p in range(8))
+    tf = tier.open("/f")
+    assert tf.stats_preads == 2
+    # probe = 1 single-page segment; window = ONE run covering pages 1..7
+    # (page 0 is cached and skipped, not re-read)
+    assert tf.stats_rvec_segments == 2
+    assert tf.stats_page_reads == 0           # DRAM prefill cached everything
+    # re-read everything: pure hits, no new backend ops
+    for p in range(8):
+        assert nv.pread(fd, 256, p * 256) == b"q" * 256
+    assert tf.stats_preads == 2
+    nv.shutdown()
+
+
+# ------------------------------------------------- dirty replay is never lost
+def test_readahead_never_bypasses_dirty_index_replay():
+    """Prefetched pages with live log entries must replay them — the
+    backend bytes alone are stale until the drain runs."""
+    pol = make_policy(readahead_pages=4, batch_min=10 ** 6, batch_max=10 ** 6,
+                      read_cache_pages=64)
+    tier = Tier(DRAM)
+    nv = NVCache(pol, tier)
+    fd = nv.open("/f")
+    E = 3
+    for p in range(8):                     # E live entries on every page
+        for j in range(E):
+            nv.pwrite(fd, bytes([16 * p + j + 1]) * 64, p * 256 + j * 64)
+    assert nv.log.used_entries == 8 * E    # nothing drained
+    # force every page out of the cache so the next reads are extent misses
+    nv.lru.drop_all()
+    scans0 = nv.log.stats_full_scans
+    replay0 = nv.stats_replay_entries
+    nv.pread(fd, 1, 0)                     # probe miss: page 0, replay E
+    got = nv.pread(fd, 256, 256)           # sequential miss: window [0, 4)
+    exp = bytearray(256)
+    for j in range(E):
+        exp[j * 64:(j + 1) * 64] = bytes([16 + j + 1]) * 64
+    assert got[:E * 64] == bytes(exp[:E * 64])
+    # pages 0..3 all replayed their index — exactly E entries each
+    assert nv.stats_replay_entries - replay0 == 4 * E
+    assert nv.log.stats_full_scans == scans0 == 0
+    assert nv.stats_readahead_pages == 2   # pages 2, 3 prefetched
+    # the prefetched pages serve the replayed (fresh) bytes on their hit
+    for p in (2, 3):
+        got = nv.pread(fd, 64, p * 256)
+        assert got == bytes([16 * p + 1]) * 64, f"stale prefetched page {p}"
+    assert nv.stats_readahead_hits == 2
+    nv.shutdown()
+
+
+def test_readahead_clamped_to_half_the_cache():
+    """A tiny read cache degrades readahead to the per-page baseline
+    instead of flushing itself on every miss."""
+    pol = make_policy(readahead_pages=8, read_cache_pages=2)
+    tier = Tier(DRAM)
+    tier.open("/f").pwrite(b"z" * (16 * 256), 0)
+    nv = NVCache(pol, tier)
+    fd = nv.open("/f")
+    for p in range(16):
+        assert nv.pread(fd, 256, p * 256) == b"z" * 256
+    assert nv.stats_readahead_loads == 0   # effective readahead == 1
+    assert tier.open("/f").stats_preads == 16
+    nv.shutdown()
+
+
+def test_extent_clipped_to_file_size():
+    pol = make_policy(readahead_pages=8, read_cache_pages=64)
+    tier = Tier(DRAM)
+    nv = NVCache(pol, tier)
+    fd = nv.open("/f")
+    nv.pwrite(fd, b"ab" * 300, 0)          # 600 bytes: pages 0..2
+    nv.flush()
+    nv.lru.drop_all()
+    assert nv.pread(fd, 600, 0) == b"ab" * 300
+    f = nv._files["/f"]
+    assert f.radix.get(3) is None or f.radix.get(3).content is None, \
+        "loaded a page past EOF"
+    nv.shutdown()
+
+
+# --------------------------------------------------- concurrency / lock order
+def test_readahead_under_eviction_pressure_and_writers():
+    """Extent loads take [atomic locks asc] then [cleanup locks asc] while
+    writers take atomic locks asc and the drain takes cleanup locks asc —
+    hammer all three with a cache smaller than the extent window and check
+    nothing deadlocks or tears."""
+    pol = Policy(entry_size=1024, log_entries=128, page_size=1024,
+                 read_cache_pages=8, batch_min=4, batch_max=16,
+                 readahead_pages=4)
+    nv = NVCache(pol, Tier(DRAM))
+    fd = nv.open("/f")
+    ps = 1024
+    NPAGES = 16                            # 2x the cache, 4x the extent
+    OPS = 40
+    errors = []
+    stop = threading.Event()
+
+    def writer(w):
+        try:
+            for i in range(OPS):
+                p = (w + i) % NPAGES
+                c = (w << 16) | (i + 1)
+                nv.pwrite(fd, struct.pack("<I", c) * (ps // 4), p * ps)
+        except Exception as exc:
+            errors.append(exc)
+
+    def reader():
+        try:
+            i = 0
+            while not stop.is_set():
+                p = i % NPAGES            # sequential: extent loads trigger
+                i += 1
+                page = nv.pread(fd, ps, p * ps)
+                if not page.strip(b"\x00"):
+                    continue
+                if page[:4] * (ps // 4) != page:
+                    errors.append(AssertionError(f"torn page {p}"))
+                    stop.set()
+        except Exception as exc:
+            errors.append(exc)
+
+    def flusher():
+        try:
+            while not stop.is_set():
+                nv.flush(timeout=60)
+        except Exception as exc:
+            errors.append(exc)
+
+    ws = [threading.Thread(target=writer, args=(w,)) for w in range(3)]
+    rs = [threading.Thread(target=reader) for _ in range(2)]
+    fl = threading.Thread(target=flusher)
+    for t in ws + rs + [fl]:
+        t.start()
+    for t in ws:
+        t.join(timeout=120)
+    stop.set()
+    for t in rs + [fl]:
+        t.join(timeout=60)
+    assert all(not t.is_alive() for t in ws + rs + [fl]), "deadlocked"
+    if errors:
+        raise errors[0]
+    assert nv.log.stats_full_scans == 0
+    nv.shutdown()
+
+
+# ----------------------------------------------------------- tier cost model
+def test_preadv_cost_and_stats_model():
+    tier = Tier(SSD_SATA)
+    f = tier.open("/v")
+    f.pwrite(b"x" * (4 * PAGE), 0)
+    f.drop_page_cache()                    # writes populated the page cache
+    assert f._dirty_pages == {0, 1, 2, 3}  # dirty pages cannot be dropped
+    f.fsync()
+    f.drop_page_cache()
+    c0 = tier.gate.total_cost
+    chunks = f.preadv([(PAGE, 0), (2 * PAGE, 2 * PAGE)])
+    assert [len(c) for c in chunks] == [PAGE, 2 * PAGE]
+    paid = tier.gate.total_cost - c0
+    expect = SSD_SATA.syscall_s + SSD_SATA.iov_seg_s + 3 * SSD_SATA.page_read_s
+    assert abs(paid - expect) < 1e-12, (paid, expect)
+    assert f.stats_preads == 1
+    assert f.stats_page_reads == 3
+    assert f.stats_rvec_segments == 2
+    # now cached: same call pays only syscall + segment overhead
+    c0 = tier.gate.total_cost
+    f.preadv([(PAGE, 0), (2 * PAGE, 2 * PAGE)])
+    paid = tier.gate.total_cost - c0
+    assert abs(paid - (SSD_SATA.syscall_s + SSD_SATA.iov_seg_s)) < 1e-12
+    # short reads past EOF
+    tail = f.preadv([(3 * PAGE, 3 * PAGE)])
+    assert len(tail[0]) == PAGE
+
+
+def test_pread_counts_read_stats():
+    tier = Tier(SSD_SATA)
+    f = tier.open("/r")
+    f.pwrite(b"y" * PAGE, 0)
+    f.drop_page_cache()
+    f.fsync()
+    f.drop_page_cache()
+    f.pread(10, 0)
+    assert f.stats_preads == 1 and f.stats_page_reads == 1
+    f.pread(10, 0)                         # cached now
+    assert f.stats_preads == 2 and f.stats_page_reads == 1
+
+
+def test_lru_overflow_converges_back_to_capacity():
+    """Overflow allocations (every victim pinned) must not ratchet the
+    resident page count up forever: later acquires shrink back."""
+    from repro.core.readcache import LRUCache, PageDesc
+    lru = LRUCache(4, 64)
+    descs = [PageDesc(i) for i in range(4)]
+    for d in descs:
+        lru.attach(d, lru.acquire_buffer())
+    for d in descs:                           # pin everything
+        d.atomic_lock.acquire()
+    extra = lru.acquire_buffer()              # forced overflow
+    assert lru._allocated == 5
+    d5 = PageDesc(5)
+    lru.attach(d5, extra)
+    for d in descs:
+        d.atomic_lock.release()
+    for i in range(6, 14):                    # normal churn shrinks the pool
+        d = PageDesc(i)
+        lru.attach(d, lru.acquire_buffer())
+    assert lru._allocated <= 4, "overflow ratcheted the cache size"
+
+
+@pytest.mark.parametrize("bad", [dict(readahead_pages=0),
+                                 dict(coalesce_deadline_ms=-1.0)])
+def test_policy_validation(bad):
+    with pytest.raises(ValueError):
+        make_policy(**bad)
