@@ -27,7 +27,8 @@ NOVA = dataclasses.replace(tiers.NVMM_OPTANE, name="nova",
 def policy(log_mib: float, *, entry=4096, batch_min=1000, batch_max=10000,
            read_pages=1024, shards=1, shard_route="stripe",
            drain_coalesce=True, fsync_epoch=True, readahead=8,
-           span_batches=True, deadline_ms=5.0) -> Policy:
+           span_batches=True, deadline_ms=5.0, rebalance=False,
+           rebalance_epoch_ms=50.0, placement_groups=1) -> Policy:
     return Policy(entry_size=entry, log_entries=max(8 * shards, int(log_mib * 1024 * 1024 // entry)),
                   page_size=4096, read_cache_pages=read_pages,
                   batch_min=batch_min, batch_max=batch_max, verify_crc=False,
@@ -35,7 +36,10 @@ def policy(log_mib: float, *, entry=4096, batch_min=1000, batch_max=10000,
                   drain_coalesce=drain_coalesce, fsync_epoch=fsync_epoch,
                   readahead_pages=readahead,
                   coalesce_span_batches=span_batches,
-                  coalesce_deadline_ms=deadline_ms)
+                  coalesce_deadline_ms=deadline_ms,
+                  shard_rebalance=rebalance,
+                  rebalance_epoch_ms=rebalance_epoch_ms,
+                  placement_groups=placement_groups)
 
 
 @dataclasses.dataclass
@@ -58,7 +62,9 @@ def make_stack(name: str, *, log_mib: float = 64, batch_min=1000,
                shards: int = 1, shard_route: str = "stripe",
                drain_coalesce: bool = True, fsync_epoch: bool = True,
                readahead: int = 8, span_batches: bool = True,
-               deadline_ms: float = 5.0) -> Stack:
+               deadline_ms: float = 5.0, rebalance: bool = False,
+               rebalance_epoch_ms: float = 50.0,
+               placement_groups: int = 1) -> Stack:
     if name == "nvcache+ssd":
         tier = tiers.Tier(tiers.SSD_SATA, sync=False, scale=scale)
         nv = NVCache(policy(log_mib, batch_min=batch_min, batch_max=batch_max,
@@ -67,7 +73,9 @@ def make_stack(name: str, *, log_mib: float = 64, batch_min=1000,
                             drain_coalesce=drain_coalesce,
                             fsync_epoch=fsync_epoch, readahead=readahead,
                             span_batches=span_batches,
-                            deadline_ms=deadline_ms), tier)
+                            deadline_ms=deadline_ms, rebalance=rebalance,
+                            rebalance_epoch_ms=rebalance_epoch_ms,
+                            placement_groups=placement_groups), tier)
         return Stack(name, NVCacheFS(nv), nv, tier)
     if name == "nvcache+nova":
         tier = tiers.Tier(NOVA, sync=False, scale=scale)
@@ -77,7 +85,9 @@ def make_stack(name: str, *, log_mib: float = 64, batch_min=1000,
                             drain_coalesce=drain_coalesce,
                             fsync_epoch=fsync_epoch, readahead=readahead,
                             span_batches=span_batches,
-                            deadline_ms=deadline_ms), tier)
+                            deadline_ms=deadline_ms, rebalance=rebalance,
+                            rebalance_epoch_ms=rebalance_epoch_ms,
+                            placement_groups=placement_groups), tier)
         return Stack(name, NVCacheFS(nv), nv, tier)
     if name == "dm-writecache":
         tier = tiers.DMWriteCacheTier(scale=scale)

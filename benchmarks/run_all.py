@@ -1,22 +1,21 @@
 """CI entry point: run the PR's headline benchmarks and emit ONE
-machine-readable JSON (``BENCH_pr3.json``) so the perf trajectory of the
+machine-readable JSON (``BENCH_pr4.json``) so the perf trajectory of the
 repo is diffable from PR 2 onward.
 
-    PYTHONPATH=src python benchmarks/run_all.py [--out BENCH_pr3.json] [--quick]
+    PYTHONPATH=src python benchmarks/run_all.py [--out BENCH_pr4.json] [--quick]
 
-Emitted metrics (schema ``bench_schema: 3``):
+Emitted metrics (schema ``bench_schema: 4``):
 
-* ``cold_read`` — cold-sequential-read throughput and *backend page-read
-  operations per byte* at ``readahead_pages`` 8 vs 1 (the paper's per-page
-  Fig. 2 miss procedure), plus the reduction factor — the read-side twin of
-  PR 2's page-write coalescing (acceptance: >= 2x fewer read ops/byte);
-* ``mixed`` — 50/50 random read/write throughput at both readahead
-  settings (readahead never bypasses the dirty-index replay);
-* ``trickle`` — backend page writes per committed byte on a small-batch
-  trickle workload with batch-spanning coalescing vs the PR-2 tip
-  (``coalesce_span_batches=False``);
-* ``coalesce`` / ``fsync_epoch_hot_file`` / ``dirty_miss`` — the PR-2
-  figures re-measured at this tip so regressions stay visible.
+* ``skew`` — committed-write throughput of the Zipf-skewed 4-writer
+  workload at K=4 where the hot fdids collide on one shard under the
+  static ``fdid`` route, vs ``shard_rebalance=True`` (the epoch router
+  migrating hot fdids behind per-file drain barriers) — acceptance:
+  >= 1.5x; plus a uniform-workload guard showing the rebalancer idles
+  (hysteresis) when there is nothing to fix;
+* ``cold_read`` / ``mixed`` / ``trickle`` / ``coalesce`` /
+  ``fsync_epoch_hot_file`` / ``dirty_miss`` — the PR-2/PR-3 figures
+  re-measured at this tip (all with ``shard_rebalance=False``, the static
+  paper baseline) so regressions stay visible.
 """
 from __future__ import annotations
 
@@ -27,11 +26,14 @@ import sys
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks import fig8_coalescing, fig9_readpath  # noqa: E402
+from benchmarks import fig8_coalescing, fig9_readpath, fig10_skew  # noqa: E402
 
 
 def run(quick: bool = False) -> dict:
     total_mib = 4 if quick else 8
+    skew = fig10_skew.run_skew(total_mib=3 if quick else 10,
+                               warmup_mib=1.5 if quick else 3.0)
+    uniform = fig10_skew.run_uniform_guard(total_mib=3 if quick else 8)
     cold = fig9_readpath.run_cold_read(total_mib=2 if quick else 8)
     mixed = fig9_readpath.run_mixed(total_mib=2 if quick else 6)
     trickle = fig9_readpath.run_trickle(n_writes=64 if quick else 192)
@@ -39,6 +41,8 @@ def run(quick: bool = False) -> dict:
     epoch = fig8_coalescing.run_fsync_epoch(total_mib=2 if quick else 4)
     dm = fig8_coalescing.run_dirty_miss(n_pages=64 if quick else 192)
 
+    skew_by = {r["mode"]: r for r in skew}
+    uni_by = {r["mode"]: r for r in uniform}
     cold_by_ra = {r["readahead_pages"]: r for r in cold}
     mixed_by_ra = {r["readahead_pages"]: r for r in mixed}
     trickle_by = {r["mode"]: r for r in trickle}
@@ -49,8 +53,20 @@ def run(quick: bool = False) -> dict:
     ppb_tip = trickle_by["pr2-tip"]["backend_page_writes_per_committed_byte"]
     ppb_span = trickle_by["span-batches"]["backend_page_writes_per_committed_byte"]
     return {
-        "bench_schema": 3,
-        "pr": 3,
+        "bench_schema": 4,
+        "pr": 4,
+        "skew": {
+            "mib_per_s": skew_by["rebalance"]["mib_per_s"],
+            "mib_per_s_static_fdid": skew_by["static-fdid"]["mib_per_s"],
+            "rebalance_speedup_x": skew_by["rebalance"]["mib_per_s"]
+                / max(1e-12, skew_by["static-fdid"]["mib_per_s"]),
+            "route_epoch": skew_by["rebalance"]["route_epoch"],
+            "route_migrations": skew_by["rebalance"]["route_migrations"],
+            "uniform_mib_per_s": uni_by["rebalance"]["mib_per_s"],
+            "uniform_mib_per_s_static_fdid": uni_by["static-fdid"]["mib_per_s"],
+            "uniform_migrations": uni_by["rebalance"]["route_migrations"],
+            "detail": skew + uniform,
+        },
         "cold_read": {
             "mib_per_s": cold_by_ra[8]["mib_per_s"],
             "mib_per_s_readahead1": cold_by_ra[1]["mib_per_s"],
@@ -93,7 +109,7 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-        "BENCH_pr3.json"))
+        "BENCH_pr4.json"))
     ap.add_argument("--quick", action="store_true",
                     help="smaller workload for CI smoke runs")
     args = ap.parse_args()
@@ -102,6 +118,8 @@ def main() -> None:
         json.dump(result, fh, indent=2, sort_keys=True)
         fh.write("\n")
     print(f"wrote {args.out}: "
+          f"{result['skew']['rebalance_speedup_x']:.2f}x committed throughput "
+          f"on the skewed-fdid workload (rebalance vs static), "
           f"{result['cold_read']['read_op_reduction_x']:.1f}x fewer backend "
           f"read ops/byte (ra=8 vs 1), "
           f"{result['trickle']['page_write_reduction_x']:.1f}x fewer trickle "

@@ -27,6 +27,7 @@ from repro.core.log import NVLog
 from repro.core.nvmm import NVMM
 from repro.core.policy import Policy
 from repro.core.readcache import AtomicInt, LRUCache, RadixTree
+from repro.core.router import EpochRouter
 from repro.core import recovery as _recovery
 
 O_RDONLY, O_WRONLY, O_RDWR = os.O_RDONLY, os.O_WRONLY, os.O_RDWR
@@ -39,7 +40,7 @@ class File:
 
     __slots__ = ("path", "fdid", "backend", "radix", "size", "size_lock",
                  "refs", "pending", "shards_touched", "_drained", "ra_next",
-                 "hwm")
+                 "hwm", "_route_cv", "route_inflight", "route_frozen")
 
     def __init__(self, path: str, fdid: int, backend):
         self.path = path
@@ -57,6 +58,13 @@ class File:
         self.ra_next = -1                        # readahead stream detector:
         #   the page a sequential miss stream would miss next; racy by
         #   design (a heuristic, like the kernel's per-file ra window)
+        # route-epoch gate (adaptive routing only): writers enter before the
+        # route lookup and exit after the log append, so a migration can
+        # freeze the file and know no in-flight write still holds a stale
+        # route (see core/router.py's ordering proof)
+        self._route_cv = threading.Condition()
+        self.route_inflight = 0
+        self.route_frozen = False
 
     def note_drained(self, n: int) -> None:      # called by the cleanup thread
         self.pending.dec(n)
@@ -67,6 +75,41 @@ class File:
         with self._drained:
             return self._drained.wait_for(lambda: self.pending.get() <= 0,
                                           timeout=timeout)
+
+    # ------------------------------------------------- route-epoch gate
+    def route_enter(self) -> None:
+        """Writer side: pin the routing epoch for one write (blocks while a
+        migration of this file is in progress)."""
+        with self._route_cv:
+            while self.route_frozen:
+                self._route_cv.wait()
+            self.route_inflight += 1
+
+    def route_exit(self) -> None:
+        with self._route_cv:
+            self.route_inflight -= 1
+            if self.route_inflight == 0 and self.route_frozen:
+                self._route_cv.notify_all()
+
+    def route_freeze(self, timeout: Optional[float] = None) -> bool:
+        """Migration side: block new writes and wait until in-flight writes
+        (which looked up their shard under the old epoch) have committed.
+        Returns False (and unfreezes) on timeout."""
+        with self._route_cv:
+            if self.route_frozen:
+                return False                     # one migration at a time
+            self.route_frozen = True
+            if self._route_cv.wait_for(lambda: self.route_inflight == 0,
+                                       timeout=timeout):
+                return True
+            self.route_frozen = False
+            self._route_cv.notify_all()
+            return False
+
+    def route_unfreeze(self) -> None:
+        with self._route_cv:
+            self.route_frozen = False
+            self._route_cv.notify_all()
 
 
 class OpenFile:
@@ -105,7 +148,17 @@ class NVCache:
         self._next_fd = 3
         self._meta = threading.Lock()
         self._fdid_free = list(range(policy.fd_max - 1, -1, -1))
-        self.cleanup = CleanupPool(self.log, self._resolve_fdid)
+        # adaptive shard routing (beyond paper, see core/router.py): the
+        # router is created AFTER the log so it adopts the persisted route
+        # record of an attached region (and an empty one after a format)
+        self.router: Optional[EpochRouter] = None
+        if policy.shard_rebalance:
+            self.router = EpochRouter(self.nvmm, policy)
+            self.log.router = self.router
+        self.cleanup = CleanupPool(self.log, self._resolve_fdid,
+                                   router=self.router,
+                                   migrate=self._migrate_route
+                                   if self.router is not None else None)
         self.cleanup.start()
         self._crashed = False
         self.stats_dirty_misses = 0
@@ -208,6 +261,11 @@ class NVCache:
             self._files.pop(f.path, None)
             self._by_fdid.pop(f.fdid, None)
             self.log.fd_table_set(f.fdid, "")   # retire the NVMM slot
+            if self.router is not None:
+                # the file is drained (pending <= 0), so its overrides can
+                # revert to static without stranding entries; keeping them
+                # would leak table slots and mis-route a reused fdid
+                self.router.drop_fdid(f.fdid)
             self._fdid_free.append(f.fdid)
             f.backend.close()
 
@@ -249,16 +307,47 @@ class NVCache:
                     # barrier by a concurrent fd — clearing it would blind
                     # readers to an entry the drain will still land
 
-    def _drain_barrier(self, f: File, label: str) -> None:
+    def _drain_barrier(self, f: File, label: str,
+                       timeout: float = 60.0) -> None:
         """Drain the shards ``f`` touched and wait for its entries to land
-        — the shared barrier under close/flock/O_TRUNC."""
+        — the shared barrier under close/flock/O_TRUNC/route migration."""
         touched = set(f.shards_touched)
         self.cleanup.request_drain(touched)
         try:
-            if not f.wait_drained(timeout=60.0):
+            if not f.wait_drained(timeout=timeout):
                 raise TimeoutError(f"drain of {f.path} timed out on {label}")
         finally:
             self.cleanup.end_drain(touched)
+
+    def _migrate_route(self, mig) -> bool:
+        """Execute one planned route migration (called by the pool's
+        rebalance thread): freeze the file's route gate, drain the file's
+        entries out of its old shard, install the new epoch, unfreeze.
+        The barrier is what keeps the overlap invariant true across the
+        epoch change — see core/router.py for the ordering proof.  Returns
+        False (table untouched) when the freeze or barrier cannot complete.
+        """
+        with self._meta:
+            f = self._by_fdid.get(mig.fdid)
+        if f is None:
+            # file retired since the plan was made: the load data is stale
+            # and the fdid may already be reused by a NEW file (whose gate
+            # we never froze) — installing now would reroute that file
+            # without the barrier.  Skip; the next epoch re-plans.
+            return False
+        if not f.route_freeze(timeout=10.0):
+            return False
+        try:
+            self._drain_barrier(f, "rebalance", timeout=10.0)
+            with self._meta:
+                if self._by_fdid.get(mig.fdid) is not f:
+                    return False    # retired (and possibly reused) mid-
+                    #                 migration: same hazard as above
+                return self.router.install(mig.key, mig.new_sid)
+        except TimeoutError:
+            return False
+        finally:
+            f.route_unfreeze()
 
     def close(self, fd: int) -> None:
         """Flush this file's pending writes to the kernel, then close
@@ -315,21 +404,32 @@ class NVCache:
         pol = self.policy
         max_op = (pol.entries_per_shard - 1) * pol.entry_data
         split_stripes = pol.shards > 1 and pol.shard_route == "stripe"
-        written = 0
-        view = memoryview(data)
-        while written < len(data):
-            lim = max_op
-            if split_stripes:
-                # ops never span a stripe: overlapping writes always route to
-                # the same shard, keeping per-location order a shard-local
-                # property (see core/log.py docstring)
-                sb = pol.stripe_bytes
-                lim = min(lim, sb - (off + written) % sb)
-            chunk = view[written:written + lim]
-            self._pwrite_op(f, bytes(chunk), off + written)
-            written += len(chunk)
-            if progress is not None:
-                progress[0] = written
+        # epoch versioning (adaptive routing only): the whole split runs
+        # under the file's route gate, so every chunk's route lookup sees
+        # ONE routing epoch and a migration cannot slip between lookup and
+        # log append (the stale-route race core/router.py rules out)
+        gated = self.router is not None
+        if gated:
+            f.route_enter()
+        try:
+            written = 0
+            view = memoryview(data)
+            while written < len(data):
+                lim = max_op
+                if split_stripes:
+                    # ops never span a stripe: overlapping writes always
+                    # route to the same shard, keeping per-location order a
+                    # shard-local property (see core/log.py docstring)
+                    sb = pol.stripe_bytes
+                    lim = min(lim, sb - (off + written) % sb)
+                chunk = view[written:written + lim]
+                self._pwrite_op(f, bytes(chunk), off + written)
+                written += len(chunk)
+                if progress is not None:
+                    progress[0] = written
+        finally:
+            if gated:
+                f.route_exit()
         return len(data)
 
     def _pwrite_op(self, f: File, data: bytes, off: int) -> None:
@@ -655,4 +755,12 @@ class NVCache:
             "drain_deferred": self.cleanup.stats_deferred,
             "drain_span_merges": self.cleanup.stats_span_merges,
             "nvmm_psyncs": self.nvmm.stats_psync,
+            "alloc_wait_s": sum(sh.stats_alloc_wait_s
+                                for sh in self.log.shards),
+            "route_epoch": self.router.epoch if self.router else 0,
+            "route_overrides": len(self.router.table) if self.router else 0,
+            "route_migrations": (self.cleanup.rebalancer.stats_migrations
+                                 if self.cleanup.rebalancer else 0),
+            "route_skew_ratio": (self.router.stats_skew_ratio
+                                 if self.router else 0.0),
         }

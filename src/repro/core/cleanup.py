@@ -35,6 +35,15 @@ log with live dirty-page-index refs, so reads and recovery are untouched.
 :class:`CleanupPool` owns the threads and lets callers target a drain at
 just the shards a file actually touched (``fsync``/``close`` wait only on
 those) or at every shard (``flush``).
+
+With ``Policy.shard_rebalance`` the pool also owns the
+:class:`RebalanceThread`: every ``Policy.rebalance_epoch_ms`` it samples
+per-shard load (:meth:`repro.core.log.LogShard.load_sample` — live entries,
+drain backlog, allocation-wait time) plus the router's per-key append
+counters, asks :meth:`repro.core.router.EpochRouter.plan` for migrations,
+and executes each through the owner's ``migrate`` callback
+(:meth:`repro.core.api.NVCache._migrate_route`: freeze the file's route
+gate, run the per-file drain barrier, install the new epoch).
 """
 from __future__ import annotations
 
@@ -230,26 +239,91 @@ class CleanupThread(threading.Thread):
         self.join(timeout=60)
 
 
+class RebalanceThread(threading.Thread):
+    """The router's epoch clock: sample shard load, plan, migrate.
+
+    Migrations run OUTSIDE the drain threads (a migration's drain barrier
+    *waits on* them), so a slow barrier never stalls draining.  A migration
+    that fails its barrier (timeout) is simply skipped — the route table is
+    untouched and the next epoch retries with fresh load data.
+    """
+
+    def __init__(self, log: NVLog, router,
+                 migrate: Callable[[object], bool]):
+        super().__init__(name="nvcache-rebalance", daemon=True)
+        self.log = log
+        self.router = router
+        self.migrate = migrate               # Migration -> installed?
+        self.stop_event = threading.Event()
+        self.error: Optional[BaseException] = None
+        self._last_wait = [0.0] * len(log.shards)   # alloc-wait deltas
+        self.stats_ticks = 0
+        self.stats_migrations = 0
+        self.stats_failed_migrations = 0
+
+    def run(self) -> None:
+        period = self.log.policy.rebalance_epoch_ms / 1e3
+        try:
+            while not self.stop_event.wait(period):
+                self.tick()
+        except BaseException as exc:         # surfaces in api.check()
+            self.error = exc
+
+    def tick(self) -> None:
+        """One sampling epoch: visible separately so tests can step the
+        rebalancer deterministically without the wall clock."""
+        self.stats_ticks += 1
+        samples = [sh.load_sample() for sh in self.log.shards]
+        waits = [s["alloc_wait_s"] for s in samples]
+        deltas = [w - p for w, p in zip(waits, self._last_wait)]
+        self._last_wait = waits
+        plan = self.router.plan([s["queue"] for s in samples],
+                                wait_deltas=deltas)
+        for mig in plan:
+            if self.stop_event.is_set():
+                return
+            try:
+                ok = self.migrate(mig)
+            except TimeoutError:
+                ok = False                   # barrier timed out: retry later
+            if ok:
+                self.stats_migrations += 1
+            else:
+                self.stats_failed_migrations += 1
+
+    def shutdown(self) -> None:
+        self.stop_event.set()
+        if self.is_alive():
+            self.join(timeout=60)
+
+
 class CleanupPool:
     """One drain thread per shard, addressed collectively or per shard.
 
     The pool owns the cross-shard :class:`FsyncEpochScheduler`: per-shard
     batches that finish around the same time and touch the same backend
-    file share one fsync epoch instead of issuing K device fsyncs.
+    file share one fsync epoch instead of issuing K device fsyncs.  With
+    adaptive routing it also owns the :class:`RebalanceThread`.
     """
 
     def __init__(self, log: NVLog,
-                 resolve_file: Callable[[int], Optional[object]]):
+                 resolve_file: Callable[[int], Optional[object]],
+                 *, router=None, migrate: Optional[Callable] = None):
         self.log = log
         self.fsync_scheduler = FsyncEpochScheduler(
             enabled=log.policy.fsync_epoch)
         self.threads = [CleanupThread(log, sh, resolve_file,
                                       fsync_scheduler=self.fsync_scheduler)
                         for sh in log.shards]
+        self.rebalancer: Optional[RebalanceThread] = None
+        if router is not None and migrate is not None:
+            self.rebalancer = RebalanceThread(log, router, migrate)
 
     def start(self) -> None:
         for t in self.threads:
             t.start()
+        if self.rebalancer is not None:
+            self.rebalancer.start()
 
     def _targets(self, shards: Optional[Iterable[int]]):
         if shards is None:
@@ -265,16 +339,24 @@ class CleanupPool:
             t.end_drain()
 
     def shutdown(self) -> None:
+        # the rebalancer first: a migration mid-flight may hold drain
+        # requests the threads below must still serve before stopping
+        if self.rebalancer is not None:
+            self.rebalancer.shutdown()
         for t in self.threads:
             t.shutdown()
 
     def power_loss(self) -> None:
+        if self.rebalancer is not None:
+            self.rebalancer.stop_event.set()
         for t in self.threads:
             t.hard_stop.set()
             t.stop_event.set()
             t.shard.notify_committed()
         for t in self.threads:
             t.join(timeout=60)
+        if self.rebalancer is not None and self.rebalancer.is_alive():
+            self.rebalancer.join(timeout=60)
 
     # ------------------------------------------------------------- status
     @property
@@ -282,6 +364,8 @@ class CleanupPool:
         for t in self.threads:
             if t.error is not None:
                 return t.error
+        if self.rebalancer is not None:
+            return self.rebalancer.error
         return None
 
     @property

@@ -2,7 +2,8 @@
 
 Layout inside the NVMM region::
 
-    [superblock + shard tail table | fd-path table | shard 0 | ... | shard K-1]
+    [superblock + shard tail table | fd-path table | route table | shard 0
+     | ... | shard K-1]
 
 The region is partitioned into ``K = policy.shards`` independent sub-logs
 (*shards*), each a circular array of fixed-size entries with its own
@@ -61,7 +62,7 @@ from repro.core.nvmm import NVMM
 from repro.core.policy import Policy, SUPERBLOCK
 
 MAGIC = 0x4E56_4341_4348_4532  # "NVCACHE2" (v1 was the unsharded layout)
-VERSION = 2
+VERSION = 3                    # v3 added the persisted route table region
 
 _SB = struct.Struct("<QIIIIII")   # magic, ver, entry_size, entries/shard, shards, fd_max, path_max
 _HDR = struct.Struct("<QQQIIII")  # cg, seq, off, fdid, length, nfollow, crc
@@ -141,6 +142,8 @@ class LogShard:
         self._committed = threading.Condition(self._lock)  # drainer waits for work
         self.head = 0                           # volatile head (paper §II-B fn1)
         self.volatile_tail = 0
+        self.stats_appended = 0                 # entries ever reserved here
+        self.stats_alloc_wait_s = 0.0           # time writers spent log-full
 
     def format(self) -> None:
         """Zero every entry header (cg == CG_FREE) and this shard's tail."""
@@ -202,18 +205,30 @@ class LogShard:
         """Reserve ``k`` contiguous entries; returns (index, seq).
 
         Blocks while the shard is full (paper Alg. 1 ``next_entry`` line 37).
-        ``seq_source`` is drawn *inside* the allocation lock so that within
-        this shard, allocation order == seq order (drain order and the
-        recovery merge then agree for every pair of entries in one shard).
+        ``timeout`` bounds the TOTAL wait as a monotonic deadline — each
+        ``Condition.wait`` gets only the remaining budget, so spurious
+        wakeups and near-miss frees (woken, still full, wait again) cannot
+        extend the wait beyond ``timeout``.  ``seq_source`` is drawn
+        *inside* the allocation lock so that within this shard, allocation
+        order == seq order (drain order and the recovery merge then agree
+        for every pair of entries in one shard).
         """
         if k > self.n - 1:
             raise ValueError("write exceeds shard capacity; split upstream")
+        deadline = None if timeout is None else time.monotonic() + timeout
         with self._space:
             while self.head + k - self.volatile_tail > self.n:
-                if not self._space.wait(timeout=timeout):
-                    raise LogFullTimeout(f"shard {self.sid} full")
+                remaining = None
+                if deadline is not None:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        raise LogFullTimeout(f"shard {self.sid} full")
+                t0 = time.monotonic()
+                self._space.wait(timeout=remaining)
+                self.stats_alloc_wait_s += time.monotonic() - t0
             idx = self.head
             self.head += k
+            self.stats_appended += k
             seq = seq_source() if seq_source is not None else 0
             return idx, seq
 
@@ -223,6 +238,7 @@ class LogShard:
                 return None
             idx = self.head
             self.head += k
+            self.stats_appended += k
             seq = seq_source() if seq_source is not None else 0
             return idx, seq
 
@@ -375,6 +391,18 @@ class LogShard:
         with self._lock:
             return self.head - self.volatile_tail
 
+    def load_sample(self) -> dict:
+        """One rebalance-epoch load sample: live entries, drain backlog
+        (committed-or-in-flight entries the drain has not yet retired), and
+        the cumulative counters the sampler turns into per-epoch deltas."""
+        with self._lock:
+            head, vtail = self.head, self.volatile_tail
+            wait_s = self.stats_alloc_wait_s
+            appended = self.stats_appended
+        return {"sid": self.sid, "used": head - vtail,
+                "queue": head - self.persistent_tail,
+                "alloc_wait_s": wait_s, "appended": appended}
+
     def notify_committed(self) -> None:
         with self._committed:
             self._committed.notify_all()
@@ -401,12 +429,30 @@ class NVLog:
         self._seq_lock = threading.Lock()
         self._seq = 0
         self.stats_full_scans = 0   # whole-log scans (must stay off hot paths)
+        self.router = None          # optional EpochRouter (adaptive routing);
+        #                             None == the static formula below, the
+        #                             PR 3 behavior bit for bit
         if format:
             self._format()
         else:
             self._check_superblock()
             if adopt:
                 self._seq = max(sh.attach() for sh in self.shards)
+                # a persisted route record means a rebalance-enabled
+                # instance installed overrides while (possibly) leaving
+                # live entries in the overridden shards.  Honor it even if
+                # this policy has shard_rebalance off: falling back to the
+                # static route would send an overlapping write to a
+                # different shard than the live entries it overlaps —
+                # breaking the invariant the whole design rests on.  An
+                # owner that enables rebalancing replaces this router with
+                # its own (loaded from the same record, so routes agree).
+                from repro.core.router import EpochRouter, load_route_record
+                epoch, table = load_route_record(nvmm, policy)
+                if epoch or table:
+                    # route-only (sampling=False): without a rebalance
+                    # thread nobody would ever drain the load counters
+                    self.router = EpochRouter(nvmm, policy, sampling=False)
 
     def next_seq(self) -> int:
         with self._seq_lock:
@@ -457,13 +503,14 @@ class NVLog:
     def route(self, fdid: int, off: int) -> int:
         """Map a write to a shard.  Overlapping writes always map to the same
         shard (per-file in "fdid" mode, per-stripe in "stripe" mode, where the
-        caller splits writes at stripe boundaries)."""
-        k = self.policy.shards
-        if k == 1:
-            return 0
-        if self.policy.shard_route == "fdid":
-            return fdid % k
-        return (fdid + off // self.policy.stripe_bytes) % k
+        caller splits writes at stripe boundaries).  With an
+        :class:`repro.core.router.EpochRouter` installed the lookup goes
+        through the current routing epoch's override table; migrations
+        preserve the overlap invariant via the per-file drain barrier (see
+        the router module docstring for the proof)."""
+        if self.router is not None:
+            return self.router.route(fdid, off)
+        return self.policy.static_shard(fdid, off)
 
     def entries_needed(self, nbytes: int) -> int:
         return max(1, -(-nbytes // self.policy.entry_data))
@@ -480,6 +527,8 @@ class NVLog:
         the group in the dirty-page index before the drain can see it.
         """
         sid = self.route(fdid, off) if shard is None else shard
+        if self.router is not None:
+            self.router.note_append(fdid, off, self.entries_needed(len(data)))
         cb = None if on_alloc is None else (
             lambda head, k, seq: on_alloc(sid, head, k, seq))
         head, k, seq = self.shards[sid].append(fdid, off, data,

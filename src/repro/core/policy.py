@@ -16,6 +16,21 @@ logs), each with its own commit path, persistent tail and drain thread.
   A hot file spreads across every shard, while any two overlapping writes
   still land in the same shard (writes are split at stripe boundaries
   upstream), which keeps per-location ordering a single-log property.
+
+Both routes are *static*: a skewed fdid distribution (several hot files
+colliding under ``fdid % K``) collapses back to single-shard throughput.
+``shard_rebalance`` layers an epoch-based adaptive router on top
+(:mod:`repro.core.router`): per-key load is sampled every
+``rebalance_epoch_ms`` and hot fdids (or hot stripes) are migrated to
+lighter shards by installing a new routing epoch — each migration takes the
+per-file drain barrier first, so the PR-1 invariant (overlapping writes
+share a shard log) survives the route change.  ``placement_groups``
+partitions the K shards into G NUMA-style groups: a migration never moves a
+key out of its group, so a file keeps its shard→drain-thread affinity.
+The route table is persisted next to the superblock (``route_base``) so an
+attach after a mid-epoch crash routes exactly as before the crash.
+``shard_rebalance=False`` (the default, and the paper baseline) leaves the
+static routes bit-identical to the PR 3 behavior.
 """
 from __future__ import annotations
 
@@ -32,6 +47,8 @@ FD_MAX = 256
 SUPERBLOCK = 4096  # superblock + shard tail table live in the first region
 SHARD_TAILS = 64   # per-shard persistent tails start here, one cacheline each
 MAX_SHARDS = (SUPERBLOCK - SHARD_TAILS) // CACHELINE
+ROUTE_HDR = 16     # persisted route record header (epoch, count, crc)
+ROUTE_ENT = 12     # one persisted route override (key u64, sid u32)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,6 +90,15 @@ class Policy:
     # The effective extent is clamped to half the read cache so readahead
     # can never flush the cache it feeds.
     readahead_pages: int = 8
+    # adaptive shard routing (see module docstring): epoch-based rebalancer
+    # migrating hot route keys (fdids, or (fdid, stripe) pairs) to lighter
+    # shards.  False == the static routes above, bit-identical to PR 3.
+    shard_rebalance: bool = False
+    rebalance_epoch_ms: float = 50.0    # load-sampling / rebalance period
+    placement_groups: int = 1           # NUMA-style shard groups: migrations
+    #                                     stay inside a key's group (1 == any
+    #                                     shard is a candidate target)
+    route_table_max: int = 64           # max persisted route overrides
 
     def __post_init__(self):
         if self.page_size & (self.page_size - 1):
@@ -92,6 +118,14 @@ class Policy:
             raise ValueError("readahead_pages must be >= 1")
         if self.coalesce_deadline_ms < 0:
             raise ValueError("coalesce_deadline_ms must be >= 0")
+        if self.rebalance_epoch_ms <= 0:
+            raise ValueError("rebalance_epoch_ms must be > 0")
+        if self.route_table_max < 1:
+            raise ValueError("route_table_max must be >= 1")
+        if not 1 <= self.placement_groups <= self.shards:
+            raise ValueError("placement_groups must be in [1, shards]")
+        if self.shards % self.placement_groups:
+            raise ValueError("placement_groups must divide shards evenly")
         per = self.log_entries // self.shards
         if per < 2:
             raise ValueError("each shard needs at least 2 entries")
@@ -122,9 +156,34 @@ class Policy:
         return self.fd_max * self.path_max
 
     @property
+    def route_base(self) -> int:
+        """Persisted route record (epoch + overrides), next to the
+        superblock's tables: [superblock | fd table | route table | shards]."""
+        return SUPERBLOCK + self.fd_table_bytes
+
+    @property
+    def route_table_bytes(self) -> int:
+        return ROUTE_HDR + self.route_table_max * ROUTE_ENT
+
+    @property
     def entries_base(self) -> int:
-        base = SUPERBLOCK + self.fd_table_bytes
+        base = self.route_base + self.route_table_bytes
         return (base + self.page_size - 1) & ~(self.page_size - 1)
+
+    def placement_group(self, sid: int) -> int:
+        """NUMA-style group of shard ``sid``: shards are carved into
+        ``placement_groups`` equal contiguous runs."""
+        return sid // (self.shards // self.placement_groups)
+
+    def static_shard(self, fdid: int, off: int) -> int:
+        """The static route formula (see module docstring) — the single
+        definition shared by ``NVLog.route`` and the adaptive router's
+        fallback."""
+        if self.shards == 1:
+            return 0
+        if self.shard_route == "fdid":
+            return fdid % self.shards
+        return (fdid + off // self.stripe_bytes) % self.shards
 
     def shard_base(self, sid: int) -> int:
         return self.entries_base + sid * self.entries_per_shard * self.entry_size

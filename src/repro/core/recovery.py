@@ -10,16 +10,36 @@ order, ``sync`` the backends, empty the log and clear the table.
 The seq-merge is what preserves durable linearizability across shards: any
 two overlapping writes were routed to the same shard (so their seqs are
 ordered by that shard's log), and replaying the union in ascending seq
-therefore applies every file location's writes in commit order.
+therefore applies every file location's writes in commit order.  Adaptive
+routing (:mod:`repro.core.router`) changes nothing here: a migration drains
+the old shard before the new epoch takes effect, so the union of committed
+groups is still totally ordered per file location by ``seq`` — the merge
+replays correctly across a mid-epoch crash, whichever epoch the persisted
+route record shows (``RecoveryStats.route_epoch`` reports it).
+
+Failure semantics of the replay itself:
+
+* **Torn groups are dropped whole.**  A multi-entry ``pwrite`` is one
+  commit group; if ANY entry of a group fails its CRC (or a committed head
+  is missing followers), replaying the surviving entries would surface a
+  partially applied write — exactly the tearing the commit protocol exists
+  to rule out.  The whole group is skipped and counted in
+  ``RecoveryStats.groups_dropped``.
+* **A failing backend never leaks handles or half-promises durability.**
+  If ``open_backend``/``pwrite`` raises mid-replay, every opened handle is
+  closed, only files whose groups ALL replayed are fsynced, the log is NOT
+  reformatted (the exception propagates and ``recover`` can be retried —
+  replay is idempotent), and the original exception is re-raised.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List
+from typing import Callable, Dict, List
 
 from repro.core.log import CG_HEAD, Entry, NVLog
 from repro.core.nvmm import NVMM
 from repro.core.policy import Policy
+from repro.core.router import load_route_record
 
 
 @dataclasses.dataclass
@@ -28,9 +48,11 @@ class RecoveryStats:
     bytes_replayed: int = 0
     holes_skipped: int = 0
     crc_failures: int = 0
+    groups_dropped: int = 0      # torn groups skipped in full (never partial)
     files: int = 0
     shards: int = 1
     groups_merged: int = 0
+    route_epoch: int = 0         # routing epoch persisted at crash time
 
 
 def recover(nvmm: NVMM, policy: Policy,
@@ -42,6 +64,7 @@ def recover(nvmm: NVMM, policy: Policy,
     """
     log = NVLog(nvmm, policy, format=False, adopt=False)
     stats = RecoveryStats(shards=policy.shards)
+    stats.route_epoch, _ = load_route_record(nvmm, policy)
 
     # phase 1: scan each shard independently, collecting committed groups
     # (head entry + its committed followers) in shard-log order.
@@ -60,31 +83,78 @@ def recover(nvmm: NVMM, policy: Policy,
     total = log.n * policy.shards
     stats.holes_skipped = total - seen if seen <= total else 0
 
-    # phase 2: merge by global commit sequence and replay in that order.
+    # phase 2: merge by global commit sequence; validate whole groups.  A
+    # group is all-or-nothing: one bad CRC (or a missing follower) drops the
+    # entire group, never just the failing entry — a multi-entry pwrite must
+    # not resurface partially applied.
     groups.sort(key=lambda g: (g[0], g[1]))
     stats.groups_merged = len(groups)
-    files: dict[str, object] = {}
-    for _seq, _sid, entries in groups:
-        for e in entries:
-            if not log.verify_entry(e):
-                stats.crc_failures += 1
-                continue
-            path = log.fd_table_get(e.fdid)
+    valid: List[tuple[int, int, List[Entry]]] = []
+    for seq, sid, entries in groups:
+        bad = sum(1 for e in entries if not log.verify_entry(e))
+        stats.crc_failures += bad
+        if bad or len(entries) != 1 + entries[0].nfollow:
+            stats.groups_dropped += 1
+            continue
+        valid.append((seq, sid, entries))
+
+    # phase 3: replay in merge order.  ``last_group`` lets the failure path
+    # tell which files had already fully replayed when a backend call threw.
+    files: Dict[str, object] = {}
+    last_group: Dict[str, int] = {}
+    for gi, (_seq, _sid, entries) in enumerate(valid):
+        path = log.fd_table_get(entries[0].fdid)
+        if path is not None:
+            last_group[path] = gi
+    done_groups = 0
+    try:
+        for gi, (_seq, _sid, entries) in enumerate(valid):
+            path = log.fd_table_get(entries[0].fdid)
             if path is None:
-                continue  # orphan entry: its file slot was already retired
+                continue  # orphan group: its file slot was already retired
             f = files.get(path)
             if f is None:
                 f = open_backend(path)
                 files[path] = f
-            f.pwrite(bytes(e.data), e.off)
-            stats.entries_replayed += 1
-            stats.bytes_replayed += e.length
-
-    for f in files.values():
-        f.fsync()
-        f.close()
+            for e in entries:
+                f.pwrite(bytes(e.data), e.off)
+                stats.entries_replayed += 1
+                stats.bytes_replayed += e.length
+            done_groups = gi + 1
+    except BaseException:
+        # a raising open_backend/pwrite must not leak the already-opened
+        # handles or fsync files whose replay never finished; the log stays
+        # intact so the caller can retry (replay is idempotent).  Cleanup
+        # errors must not mask the original exception.
+        _finish(files, last_group, done_groups, suppress=True)
+        raise
+    _finish(files, last_group, done_groups)
     stats.files = len(files)
 
     # paper: "empties the log" — reformat the region for the next run
+    # (reached only on success; the reformat also clears the route record)
     NVLog(nvmm, policy, format=True)
     return stats
+
+
+def _finish(files: Dict[str, object], last_group: Dict[str, int],
+            done_groups: int, *, suppress: bool = False) -> None:
+    """Fsync every file whose groups all replayed, then close ALL handles
+    (even on fsync failure — the first error propagates after the closes,
+    unless ``suppress`` because a replay exception is already in flight)."""
+    first_err: BaseException | None = None
+    for path, f in files.items():
+        try:
+            if last_group.get(path, -1) < done_groups:
+                f.fsync()
+        except BaseException as exc:
+            if first_err is None:
+                first_err = exc
+        finally:
+            try:
+                f.close()
+            except BaseException as exc:
+                if first_err is None:
+                    first_err = exc
+    if first_err is not None and not suppress:
+        raise first_err

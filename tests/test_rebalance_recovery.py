@@ -1,0 +1,156 @@
+"""Crash + recovery property: no partial commit group is EVER observable
+after ``recover()`` — under static routes and under adaptive routing with a
+route-epoch flip mid-sequence.
+
+The harness reuses the fuse model of ``test_sharded_recovery``: a fuse
+wired into the simulated NVMM kills the run after an arbitrary number of
+persistence-protocol operations (store/pwb/pfence/psync), then ``crash()``
+adversarially evicts a random subset of the un-flushed cachelines.  The
+fuse window covers the route-epoch install itself, so a crash can land
+mid-``EpochRouter.install`` — the CRC'd route record must then parse as
+either the old or the new epoch, never garbage, and recovery must still
+replay every file to exactly the completed prefix (plus possibly the
+in-flight write IN FULL).
+
+Why a flip with no drain barrier is still recovery-safe (and hence what
+this test actually proves): the barrier exists for the *drain* path — two
+live shards holding overlapping entries would let two drain threads race.
+Recovery has no such race: it merges ALL shards' committed groups by the
+global commit seq and replays them in that one total order, so even the
+barrier-less flip injected here (which deliberately leaves old-epoch
+entries live in the old shard while new-epoch writes land elsewhere)
+recovers every location in commit order.  K ∈ {1, 2, 4}, both static
+routes, multi-entry groups included.
+"""
+import random
+
+import pytest
+
+from repro.core import Policy, recover
+from repro.core.router import EpochRouter
+from repro.storage.tiers import DRAM, Tier
+from test_sharded_recovery import (FusedNVMM, NFILES, PowerLoss, apply_ops,
+                                   fresh_log, gen_subops, split_stripes,
+                                   state_matches)
+
+
+def run_sequence(nvmm, pol, subops, flip_at, flip_key_op, arm=None):
+    """Append ``subops`` in order, installing a route override for the file
+    of ``subops[flip_key_op]`` just before subop ``flip_at``.  The op
+    counter resets (and the fuse arms) AFTER the format, so the fuse window
+    covers exactly the append sequence plus the epoch install.  Returns
+    (completed, inflight)."""
+    log = fresh_log(nvmm, pol)
+    router = EpochRouter(nvmm, pol)
+    log.router = router
+    nvmm.ops = 0
+    if arm is not None:
+        nvmm.arm(arm)
+    completed, inflight = [], None
+    try:
+        for i, op in enumerate(subops):
+            if i == flip_at:
+                fdid, off, _ = subops[flip_key_op]
+                key = router.key_of(fdid, off)
+                if key is not None:
+                    cur = router.route(fdid, off)
+                    inflight = None            # install writes no file data
+                    router.install(key, (cur + 1) % pol.shards)
+            inflight = op
+            log.append(*op, timeout=10.0)
+            completed.append(op)
+            inflight = None
+    except PowerLoss:
+        pass
+    return completed, inflight
+
+
+@pytest.mark.parametrize("route", ["stripe", "fdid"])
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_no_partial_group_after_recovery_across_epoch_flip(k, route):
+    pol = Policy(entry_size=256, log_entries=64 * k, page_size=256,
+                 read_cache_pages=4, batch_min=2, batch_max=8,
+                 shards=k, shard_route=route, stripe_pages=2,
+                 shard_rebalance=True)
+    for trial in range(25):
+        rng = random.Random(7000 * k + 10 * trial + (route == "fdid"))
+        subops = gen_subops(rng, pol)
+        flip_at = rng.randrange(0, len(subops) + 1)
+        flip_key_op = rng.randrange(0, len(subops))
+
+        # dry run: total protocol ops of the full sequence incl. the install
+        dry = FusedNVMM(pol.nvmm_bytes)
+        run_sequence(dry, pol, subops, flip_at, flip_key_op)
+        total_ops = dry.ops
+
+        # real run: blow the fuse at a uniformly random protocol point
+        nvmm = FusedNVMM(pol.nvmm_bytes, track=True)
+        completed, inflight = run_sequence(
+            nvmm, pol, subops, flip_at, flip_key_op,
+            arm=rng.randrange(0, total_ops + 1))
+
+        nvmm._fuse = None
+        nvmm.crash(choose_evicted=lambda lines: [l for l in lines
+                                                 if rng.random() < 0.5])
+        tier = Tier(DRAM)
+        stats = recover(nvmm, pol, tier.open)
+        assert stats.crc_failures == 0
+        assert stats.groups_dropped == 0
+
+        exp = apply_ops(completed)
+        exp_in = apply_ops(completed + [inflight]) if inflight else None
+        for fdid in range(NFILES):
+            got = tier.open(f"/f{fdid}").snapshot() \
+                if tier.exists(f"/f{fdid}") else b""
+            ok = state_matches(got, bytes(exp.get(fdid, b"")))
+            if not ok and exp_in is not None and inflight[0] == fdid:
+                # the in-flight group's commit line reached media: the write
+                # must then appear in full, never torn
+                ok = state_matches(got, bytes(exp_in.get(fdid, b"")))
+            assert ok, (f"k={k} route={route} trial={trial} file=/f{fdid}: "
+                        f"recovered bytes are neither the completed prefix "
+                        f"nor prefix+inflight (torn or reordered group), "
+                        f"route_epoch={stats.route_epoch}")
+
+
+@pytest.mark.parametrize("k", [2, 4])
+def test_crash_mid_install_leaves_record_old_or_new(k):
+    """Fuse inside EpochRouter.install: after the crash the persisted route
+    record must parse as epoch N or N+1, never as a torn record that maps
+    keys to garbage shards."""
+    from repro.core.router import load_route_record
+    pol = Policy(entry_size=256, log_entries=64 * k, page_size=256,
+                 read_cache_pages=4, batch_min=2, batch_max=8,
+                 shards=k, shard_route="fdid", shard_rebalance=True)
+    # an install costs a fixed number of protocol ops; probe every fuse point
+    probe = FusedNVMM(pol.nvmm_bytes)
+    fresh_log(probe, pol)
+    router = EpochRouter(probe, pol)
+    probe.ops = 0
+    router.install(0, 1)
+    install_ops = probe.ops
+    assert install_ops > 0
+    for fuse in range(install_ops + 1):
+        nvmm = FusedNVMM(pol.nvmm_bytes, track=True)
+        log = fresh_log(nvmm, pol)
+        r = EpochRouter(nvmm, pol)
+        log.router = r
+        r.install(0, 1)                      # epoch 1, durable
+        log.append(0, 0, b"x" * 100, timeout=10.0)
+        nvmm.arm(fuse)
+        try:
+            r.install(0, 2 % k if 2 % k != r.static_route(0, 0) else 1)
+        except PowerLoss:
+            pass
+        nvmm._fuse = None
+        rng = random.Random(fuse)
+        nvmm.crash(choose_evicted=lambda lines: [l for l in lines
+                                                 if rng.random() < 0.5])
+        epoch, table = load_route_record(nvmm, pol)
+        assert epoch in (0, 1, 2)
+        for key, sid in table.items():
+            assert 0 <= sid < k
+        # and the data entry still recovers regardless of the record state
+        tier = Tier(DRAM)
+        recover(nvmm, pol, tier.open)
+        assert tier.open("/f0").snapshot()[:100] == b"x" * 100

@@ -1,0 +1,258 @@
+"""Regression tests for the PR-4 recovery-correctness bug cluster.
+
+1. Torn commit groups: a CRC failure on ANY entry of a committed group must
+   drop the whole group — replaying the surviving entries would surface a
+   partially applied multi-entry pwrite (exactly what the commit protocol
+   promises can never happen).
+2. Recovery fd leak: a raising ``open_backend``/``pwrite`` mid-replay must
+   close every already-opened backend handle, fsync only files that fully
+   replayed, leave the log intact (replay is idempotent, so a retry works)
+   and re-raise.
+3. ``LogShard.alloc`` timeout: the caller's ``timeout`` must be a total
+   monotonic deadline, not a per-``Condition.wait`` budget — spurious
+   wakeups / near-miss frees used to extend the wait unboundedly.
+
+Each test fails on the pre-fix code.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core import NVMM, Policy, recover
+from repro.core import log as log_mod
+from repro.core.log import HDR_SIZE, LogFullTimeout, NVLog
+from repro.storage.tiers import DRAM, Tier
+
+POL = Policy(entry_size=256, log_entries=64, page_size=256,
+             read_cache_pages=4, batch_min=2, batch_max=8)
+ED = POL.entry_data
+
+
+def fresh_log(nvmm, pol=POL, nfiles=2):
+    log = NVLog(nvmm, pol, format=True)
+    for fdid in range(nfiles):
+        log.fd_table_set(fdid, f"/f{fdid}")
+    return log
+
+
+# ------------------------------------------------------------ torn groups
+def test_corrupt_follower_drops_whole_group():
+    nvmm = NVMM(POL.nvmm_bytes, track=True)
+    log = fresh_log(nvmm, nfiles=1)
+    torn = bytes(range(1, 256)) * 2                  # 510 B -> 3 entries
+    assert log.entries_needed(len(torn)) == 3
+    log.append(0, 0, torn)                           # the group to corrupt
+    log.append(0, 1000, b"B" * 100)                  # an innocent bystander
+    nvmm.crash()
+    # media corruption on the FOLLOWER (idx 1) payload: its head still says
+    # committed, so pre-fix recovery replayed the head + second follower
+    sh = log.shards[0]
+    eoff = sh._eoff(1) + HDR_SIZE
+    nvmm.store(eoff, bytes([nvmm.load(eoff, 1)[0] ^ 0xFF]))
+    tier = Tier(DRAM)
+    stats = recover(nvmm, POL, tier.open)
+    got = tier.open("/f0").snapshot()
+    # the bystander group replays; NO byte of the torn group may appear
+    assert got[1000:1100] == b"B" * 100
+    assert all(b == 0 for b in got[:len(torn)]), \
+        "torn commit group partially applied"
+    assert stats.crc_failures == 1
+    assert stats.groups_dropped == 1
+    assert stats.entries_replayed == 1               # just the bystander
+
+
+def test_corrupt_head_drops_whole_group_too():
+    nvmm = NVMM(POL.nvmm_bytes, track=True)
+    log = fresh_log(nvmm, nfiles=1)
+    torn = b"\x55" * (2 * ED)                        # exactly 2 entries
+    log.append(0, 0, torn)
+    nvmm.crash()
+    sh = log.shards[0]
+    eoff = sh._eoff(0) + HDR_SIZE
+    nvmm.store(eoff, b"\xaa")                        # flip a head payload byte
+    tier = Tier(DRAM)
+    stats = recover(nvmm, POL, tier.open)
+    got = tier.open("/f0").snapshot() if tier.exists("/f0") else b""
+    assert all(b == 0 for b in got)
+    assert stats.groups_dropped == 1 and stats.entries_replayed == 0
+
+
+# ---------------------------------------------------------------- fd leak
+class FlakyBackend:
+    """In-memory backend that raises on the Nth pwrite (globally)."""
+
+    budget = None        # class-level: remaining pwrites before the raise
+    opened = []
+
+    def __init__(self, path):
+        self.path = path
+        self.data = bytearray()
+        self.pwrites = 0
+        self.fsyncs = 0
+        self.closed = 0
+        FlakyBackend.opened.append(self)
+
+    def pwrite(self, data, off):
+        if FlakyBackend.budget is not None:
+            if FlakyBackend.budget <= 0:
+                raise OSError("injected pwrite failure")
+            FlakyBackend.budget -= 1
+        self.pwrites += 1
+        if off + len(data) > len(self.data):
+            self.data.extend(b"\x00" * (off + len(data) - len(self.data)))
+        self.data[off:off + len(data)] = data
+        return len(data)
+
+    def fsync(self):
+        self.fsyncs += 1
+
+    def close(self):
+        self.closed += 1
+
+
+@pytest.fixture
+def flaky():
+    FlakyBackend.budget = None
+    FlakyBackend.opened = []
+    yield FlakyBackend
+    FlakyBackend.budget = None
+    FlakyBackend.opened = []
+
+
+def crashed_two_file_log():
+    nvmm = NVMM(POL.nvmm_bytes, track=True)
+    log = fresh_log(nvmm)
+    log.append(0, 0, b"a" * 50)      # /f0, group 0
+    log.append(0, 100, b"a" * 50)    # /f0, group 1
+    log.append(1, 0, b"b" * 50)      # /f1, group 2
+    log.append(1, 100, b"b" * 50)    # /f1, group 3
+    return nvmm
+
+
+def test_midreplay_failure_closes_all_handles_and_fsyncs_completed(flaky):
+    nvmm = crashed_two_file_log()
+    nvmm.crash()
+    flaky.budget = 2                 # /f0 replays fully; /f1's first pwrite dies
+    with pytest.raises(OSError, match="injected"):
+        recover(nvmm, POL, flaky)
+    assert len(flaky.opened) == 2
+    by_path = {b.path: b for b in flaky.opened}
+    assert all(b.closed == 1 for b in flaky.opened), \
+        "mid-replay failure leaked backend handles"
+    assert by_path["/f0"].fsyncs == 1          # fully replayed before failure
+    assert by_path["/f1"].fsyncs == 0          # incomplete: must NOT fsync
+
+
+def test_failed_recovery_leaves_log_intact_and_retry_succeeds(flaky):
+    nvmm = crashed_two_file_log()
+    nvmm.crash()
+    flaky.budget = 2
+    with pytest.raises(OSError):
+        recover(nvmm, POL, flaky)
+    # the log was NOT reformatted: a retry replays everything (idempotent)
+    flaky.budget = None
+    tier = Tier(DRAM)
+    stats = recover(nvmm, POL, tier.open)
+    assert stats.entries_replayed == 4
+    assert tier.open("/f0").snapshot()[100:150] == b"a" * 50
+    assert tier.open("/f1").snapshot()[100:150] == b"b" * 50
+
+
+def test_open_backend_failure_closes_earlier_handles(flaky):
+    nvmm = crashed_two_file_log()
+    nvmm.crash()
+
+    def opener(path):
+        if path == "/f1":
+            raise PermissionError("injected open failure")
+        return flaky(path)
+
+    with pytest.raises(PermissionError):
+        recover(nvmm, POL, opener)
+    assert len(flaky.opened) == 1 and flaky.opened[0].closed == 1
+
+
+# ------------------------------------------------------- alloc deadline
+def test_alloc_timeout_is_a_total_deadline():
+    """Spurious wakeups must not restart the timeout.  A stepped fake clock
+    drives the deadline; a notifier keeps waking the waiter without freeing
+    space.  Pre-fix, every wakeup re-armed the FULL timeout and the waiter
+    outlived the budget by an unbounded factor."""
+    pol = Policy(entry_size=256, log_entries=4, page_size=256,
+                 read_cache_pages=4)
+    nvmm = NVMM(pol.nvmm_bytes)
+    log = NVLog(nvmm, pol, format=True)
+    sh = log.shards[0]
+    sh.alloc(3)                              # n=4 but k <= n-1 per alloc,
+    sh.alloc(1)                              # so fill in two steps
+    clock = {"t": 0.0}
+    real_monotonic = time.monotonic
+    log_mod.time.monotonic = lambda: clock["t"]
+    result = {}
+    try:
+        def worker():
+            try:
+                sh.alloc(1, timeout=0.05)
+            except LogFullTimeout:
+                result["elapsed"] = clock["t"]
+            except BaseException as exc:     # pragma: no cover
+                result["err"] = exc
+
+        t = threading.Thread(target=worker)
+        t.start()
+        # spurious wakeups every ~4 ms real time, 0.02 s fake time apiece;
+        # stop the charade once fake time reaches 20x the timeout
+        while "elapsed" not in result and "err" not in result \
+                and clock["t"] < 1.0:
+            time.sleep(0.004)
+            with sh._space:
+                clock["t"] += 0.02
+                sh._space.notify_all()
+        t.join(timeout=10.0)
+    finally:
+        log_mod.time.monotonic = real_monotonic
+    assert not t.is_alive(), "alloc never timed out"
+    assert "err" not in result, result.get("err")
+    assert "elapsed" in result, "alloc neither returned nor timed out"
+    # deadline semantics: raised within one wakeup-step of the 0.05 s budget
+    assert result["elapsed"] <= 0.05 + 0.021, \
+        f"timeout extended to {result['elapsed']:.3f}s by spurious wakeups"
+    assert sh.stats_alloc_wait_s > 0.0
+
+
+def test_alloc_zero_timeout_raises_immediately_when_full():
+    pol = Policy(entry_size=256, log_entries=4, page_size=256,
+                 read_cache_pages=4)
+    nvmm = NVMM(pol.nvmm_bytes)
+    log = NVLog(nvmm, pol, format=True)
+    sh = log.shards[0]
+    sh.alloc(3)
+    sh.alloc(1)                              # shard now full
+    t0 = time.monotonic()
+    with pytest.raises(LogFullTimeout):
+        sh.alloc(1, timeout=0.0)
+    assert time.monotonic() - t0 < 1.0
+
+
+def test_alloc_succeeds_when_space_frees_before_deadline():
+    pol = Policy(entry_size=256, log_entries=4, page_size=256,
+                 read_cache_pages=4)
+    nvmm = NVMM(pol.nvmm_bytes)
+    log = NVLog(nvmm, pol, format=True)
+    sh = log.shards[0]
+    head, _ = sh.alloc(3)
+    sh.alloc(1)                              # shard now full
+    assert head == 0
+
+    def free_soon():
+        time.sleep(0.05)
+        with sh._space:                      # emulate a drain recycling slots
+            sh.volatile_tail = 2
+            sh._space.notify_all()
+
+    t = threading.Thread(target=free_soon)
+    t.start()
+    idx, _ = sh.alloc(2, timeout=5.0)        # must ride out the wait
+    t.join()
+    assert idx == 4

@@ -1,0 +1,380 @@
+"""Epoch-based adaptive shard routing (core/router.py).
+
+Covers: the static fallback (empty table == PR-3 routes, bit for bit), the
+persisted route record (install/load roundtrip, torn-record CRC rejection),
+the greedy planner (skew detection, hysteresis, placement-group
+confinement, noise-key rejection), and the full migration protocol through
+the api (freeze -> drain barrier -> install -> unfreeze) with data
+integrity across the epoch flip.
+"""
+import threading
+
+import pytest
+
+from repro.core import NVMM, NVCache, Policy
+from repro.core.log import NVLog
+from repro.core.router import (EpochRouter, MIN_RATIO, load_route_record)
+from repro.storage.tiers import DRAM, Tier
+
+
+def make_policy(**kw):
+    base = dict(entry_size=256, log_entries=256, page_size=256,
+                read_cache_pages=8, batch_min=2, batch_max=16,
+                shards=4, shard_route="fdid", shard_rebalance=True,
+                rebalance_epoch_ms=10_000)   # ticks are driven manually
+    base.update(kw)
+    return Policy(**base)
+
+
+def make_nv(pol):
+    tier = Tier(DRAM)
+    return NVCache(pol, tier), tier
+
+
+# ------------------------------------------------------------------ routing
+def test_empty_table_matches_static_routes():
+    for route in ("fdid", "stripe"):
+        pol = make_policy(shard_route=route, stripe_pages=2)
+        nvmm = NVMM(pol.nvmm_bytes)
+        log = NVLog(nvmm, pol, format=True)
+        router = EpochRouter(nvmm, pol)
+        for fdid in range(8):
+            for off in range(0, 4 * pol.stripe_bytes, pol.stripe_bytes // 2):
+                assert router.route(fdid, off) == log.route(fdid, off)
+
+
+def test_shard_rebalance_false_keeps_router_off():
+    pol = make_policy(shard_rebalance=False)
+    nv, _ = make_nv(pol)
+    try:
+        assert nv.router is None
+        assert nv.log.router is None
+        assert nv.cleanup.rebalancer is None
+    finally:
+        nv.shutdown()
+
+
+def test_override_reroutes_and_install_roundtrip():
+    pol = make_policy()
+    nvmm = NVMM(pol.nvmm_bytes)
+    NVLog(nvmm, pol, format=True)
+    router = EpochRouter(nvmm, pol)
+    assert router.route(0, 0) == 0
+    assert router.install(0, 3)
+    assert router.epoch == 1
+    assert router.route(0, 0) == 3
+    # a second router on the same region adopts the persisted epoch
+    router2 = EpochRouter(nvmm, pol)
+    assert router2.epoch == 1
+    assert router2.route(0, 0) == 3
+    # installing the static route drops the override instead of growing
+    assert router.install(0, 0)
+    assert router.table == {}
+    epoch, table = load_route_record(nvmm, pol)
+    assert epoch == 2 and table == {}
+
+
+def test_torn_route_record_falls_back_to_static():
+    pol = make_policy()
+    nvmm = NVMM(pol.nvmm_bytes)
+    NVLog(nvmm, pol, format=True)
+    router = EpochRouter(nvmm, pol)
+    router.install(5, 2)
+    # corrupt one payload byte after the header: CRC must reject the record
+    nvmm.store(pol.route_base + 16, b"\xff")
+    epoch, table = load_route_record(nvmm, pol)
+    assert (epoch, table) == (0, {})
+    assert EpochRouter(nvmm, pol).route(5, 0) == 5 % pol.shards
+
+
+def test_route_table_cap_refuses_install():
+    pol = make_policy(route_table_max=2)
+    nvmm = NVMM(pol.nvmm_bytes)
+    NVLog(nvmm, pol, format=True)
+    router = EpochRouter(nvmm, pol)
+    assert router.install(0, 1)
+    assert router.install(1, 2)
+    assert not router.install(2, 3)          # full: table untouched
+    assert router.table == {0: 1, 1: 2}
+
+
+def test_format_clears_route_record():
+    pol = make_policy()
+    nvmm = NVMM(pol.nvmm_bytes)
+    NVLog(nvmm, pol, format=True)
+    EpochRouter(nvmm, pol).install(0, 3)
+    NVLog(nvmm, pol, format=True)            # reformat (recovery does this)
+    assert load_route_record(nvmm, pol) == (0, {})
+
+
+# ----------------------------------------------------------------- planning
+def feed(router, key_loads):
+    """Simulate one epoch of appends: {fdid: entries}."""
+    for fdid, n in key_loads.items():
+        router.note_append(fdid, 0, n)
+
+
+def test_plan_moves_colliding_hot_fdids_apart():
+    pol = make_policy()
+    nvmm = NVMM(pol.nvmm_bytes)
+    NVLog(nvmm, pol, format=True)
+    router = EpochRouter(nvmm, pol)
+    # fdids 0 and 4 collide on shard 0; both hot
+    feed(router, {0: 40, 4: 40, 1: 1, 2: 1, 3: 1})
+    plan = router.plan()
+    assert len(plan) == 1
+    mig = plan[0]
+    assert mig.key in (0, 4) and mig.old_sid == 0 and mig.new_sid != 0
+    router.install(mig.key, mig.new_sid)
+    # steady state afterwards: one hot key per shard, nothing to move
+    feed(router, {0: 40, 4: 40, 1: 1, 2: 1, 3: 1})
+    assert router.plan() == []
+
+
+def test_plan_hysteresis_ignores_balanced_and_idle_epochs():
+    pol = make_policy()
+    nvmm = NVMM(pol.nvmm_bytes)
+    NVLog(nvmm, pol, format=True)
+    router = EpochRouter(nvmm, pol)
+    feed(router, {0: 20, 1: 20, 2: 20, 3: 20})    # balanced
+    assert router.plan() == []
+    feed(router, {0: 3, 4: 3})                    # below MIN_EPOCH_ENTRIES
+    assert router.plan() == []
+    assert MIN_RATIO > 1.0                        # documented hysteresis
+
+
+def test_plan_respects_placement_groups():
+    # shards {0,1} and {2,3} are separate NUMA-style groups: a hot key on
+    # shard 0 may only move to shard 1, even when shard 3 is idle
+    pol = make_policy(placement_groups=2)
+    nvmm = NVMM(pol.nvmm_bytes)
+    NVLog(nvmm, pol, format=True)
+    router = EpochRouter(nvmm, pol)
+    feed(router, {0: 40, 4: 40, 1: 2})
+    plan = router.plan()
+    assert plan and all(m.new_sid in (0, 1) for m in plan)
+
+
+def test_plan_skips_noise_keys():
+    pol = make_policy()
+    nvmm = NVMM(pol.nvmm_bytes)
+    NVLog(nvmm, pol, format=True)
+    router = EpochRouter(nvmm, pol)
+    # one dominant key: moving it just relocates the hot spot; the tiny
+    # cohabitant closes <10% of the gap — neither is worth a barrier
+    feed(router, {0: 100, 4: 2})
+    assert router.plan() == []
+
+
+def test_plan_skips_moves_that_cannot_fit_the_table():
+    """A migration whose install would be refused (table full) must not be
+    planned at all — the freeze + drain barrier would be paid every epoch
+    for nothing."""
+    pol = make_policy(route_table_max=1)
+    nvmm = NVMM(pol.nvmm_bytes)
+    NVLog(nvmm, pol, format=True)
+    router = EpochRouter(nvmm, pol)
+    assert router.install(5, 2)              # occupies the only slot
+    feed(router, {0: 40, 4: 40, 1: 1})       # skew that wants a migration
+    assert router.plan() == []
+
+
+def test_route_only_router_never_accumulates_counters():
+    """The attach-adopted router (sampling=False) has no rebalance thread
+    to drain its counters; note_append must be a no-op there."""
+    pol = make_policy()
+    nvmm = NVMM(pol.nvmm_bytes)
+    log = NVLog(nvmm, pol, format=True)
+    EpochRouter(nvmm, pol).install(0, 3)
+    log.fd_table_set(0, "/f")
+    log.append(0, 0, b"x" * 50)
+    log2 = NVLog(nvmm, pol, format=False)    # auto-adopts, route-only
+    assert log2.router is not None and not log2.router.sampling
+    for i in range(50):
+        log2.append(0, i * 100, b"y" * 50)
+    assert log2.router._key_load == {}
+
+
+def test_stripe_keys_pack_fdid_and_stripe():
+    pol = make_policy(shard_route="stripe", stripe_pages=2)
+    nvmm = NVMM(pol.nvmm_bytes)
+    NVLog(nvmm, pol, format=True)
+    router = EpochRouter(nvmm, pol)
+    sb = pol.stripe_bytes
+    k0 = router.key_of(3, 0)
+    k4 = router.key_of(3, 4 * sb)
+    assert k0 != k4
+    assert EpochRouter.key_fdid(k0, pol) == EpochRouter.key_fdid(k4, pol) == 3
+    router.install(k4, 2)
+    assert router.route(3, 4 * sb) == 2
+    assert router.route(3, 4 * sb + sb - 1) == 2     # same stripe
+    assert router.route(3, 0) == router.static_route(3, 0)
+
+
+# ------------------------------------------------------- api-level migration
+def test_rebalance_end_to_end_migrates_and_keeps_data():
+    pol = make_policy()
+    nv, tier = make_nv(pol)
+    try:
+        fds = [nv.open(f"/f{i}") for i in range(8)]
+        for rep in range(40):
+            nv.pwrite(fds[0], bytes([1]) * 100, rep * 100)
+            nv.pwrite(fds[4], bytes([2]) * 100, rep * 100)
+        for i in (1, 2, 3, 5, 6, 7):
+            nv.pwrite(fds[i], b"x" * 50, 0)
+        assert nv.log.route(0, 0) == nv.log.route(4, 0) == 0   # collision
+        nv.cleanup.rebalancer.tick()
+        assert nv.router.epoch >= 1
+        assert nv.cleanup.rebalancer.stats_migrations >= 1
+        assert nv.log.route(0, 0) != nv.log.route(4, 0)        # spread out
+        # post-flip writes land and read back through the new route
+        for rep in range(10):
+            nv.pwrite(fds[0], bytes([7]) * 100, rep * 100)
+        assert nv.pread(fds[0], 100, 0) == bytes([7]) * 100
+        assert nv.pread(fds[4], 100, 0) == bytes([2]) * 100
+        nv.flush()
+        st = nv.stats()
+        assert st["route_epoch"] >= 1 and st["route_migrations"] >= 1
+    finally:
+        nv.shutdown()
+    assert tier.open("/f0").snapshot()[:100] == bytes([7]) * 100
+    assert tier.open("/f4").snapshot()[:100] == bytes([2]) * 100
+
+
+def test_migration_blocks_until_inflight_writes_commit():
+    """The freeze must wait for a writer that already pinned its route."""
+    pol = make_policy()
+    nv, _ = make_nv(pol)
+    try:
+        fd = nv.open("/f0")
+        f = nv._of(fd).file
+        f.route_enter()                      # simulate an in-flight write
+        done = threading.Event()
+
+        def freeze():
+            assert f.route_freeze(timeout=5.0)
+            done.set()
+
+        t = threading.Thread(target=freeze)
+        t.start()
+        assert not done.wait(0.15)           # blocked on the in-flight write
+        f.route_exit()
+        assert done.wait(5.0)
+        f.route_unfreeze()
+        t.join()
+        # a frozen gate blocks route_enter until unfreeze
+        assert f.route_freeze(timeout=1.0)
+        entered = threading.Event()
+        t2 = threading.Thread(target=lambda: (f.route_enter(), entered.set()))
+        t2.start()
+        assert not entered.wait(0.15)
+        f.route_unfreeze()
+        assert entered.wait(5.0)
+        f.route_exit()
+        t2.join()
+    finally:
+        nv.shutdown()
+
+
+def test_concurrent_writers_survive_live_rebalancing():
+    """Writers hammer colliding hot files while the rebalance thread runs at
+    a fast epoch; every acknowledged write must be durable and ordered."""
+    pol = make_policy(log_entries=512, rebalance_epoch_ms=20)
+    nv, tier = make_nv(pol)
+    errors = []
+    try:
+        fds = [nv.open(f"/f{i}") for i in range(8)]
+
+        def writer(w):
+            try:
+                fd = fds[4 * (w % 2)]        # files 0 and 4: shard collision
+                for i in range(120):
+                    nv.pwrite(fd, bytes([w + 1]) * 64, (w * 120 + i) * 64)
+            except Exception as exc:         # pragma: no cover
+                errors.append(exc)
+
+        ts = [threading.Thread(target=writer, args=(w,)) for w in range(4)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert not errors
+        nv.flush()
+        for w in range(4):
+            fd = fds[4 * (w % 2)]
+            got = nv.pread(fd, 64, (w * 120 + 119) * 64)
+            assert got == bytes([w + 1]) * 64
+    finally:
+        nv.shutdown()
+
+
+def test_attach_restores_routes_for_live_entries():
+    """NVLog(format=False) on a region with live entries + an installed
+    epoch must route new writes like the pre-restart instance did — the
+    whole point of persisting the table next to the superblock."""
+    pol = make_policy()
+    nvmm = NVMM(pol.nvmm_bytes)
+    log = NVLog(nvmm, pol, format=True)
+    router = EpochRouter(nvmm, pol)
+    log.router = router
+    log.fd_table_set(0, "/f")
+    router.install(0, 3)
+    log.append(0, 0, b"a" * 100)             # live entry now in shard 3
+    assert log.shards[3].used_entries > 0
+    # "restart": fresh objects on the same region.  The attach must honor
+    # the persisted record on its own — even a shard_rebalance=False owner
+    # that never installs a router must not fall back to static routes
+    # while old-epoch entries are live.
+    log2 = NVLog(nvmm, pol, format=False)
+    assert log2.router is not None           # auto-adopted from the record
+    assert log2.route(0, 0) == 3             # NOT the static shard 0
+    router2 = EpochRouter(nvmm, pol)
+    log2.router = router2
+    assert log2.route(0, 0) == 3
+    log2.append(0, 50, b"b" * 100)           # overlaps: must share shard 3
+    assert log2.shards[3].used_entries >= log.shards[3].used_entries
+    assert log2.shards[0].used_entries == 0
+
+
+def test_retiring_a_file_drops_its_overrides():
+    """A retired fdid's overrides must leave the table (else dead entries
+    fill route_table_max forever and a reused fdid inherits dead routing)."""
+    pol = make_policy()
+    nv, _ = make_nv(pol)
+    try:
+        fd = nv.open("/hot")                 # fdid 0
+        nv.pwrite(fd, b"x" * 100, 0)
+        nv.router.install(0, 3)
+        assert nv.log.route(0, 0) == 3
+        epoch_before = nv.router.epoch
+        nv.close(fd)                         # drains, retires fdid 0
+        assert 0 not in nv.router.table
+        assert nv.router.epoch > epoch_before
+        # a new file reusing fdid 0 starts on its static route
+        fd2 = nv.open("/other")
+        assert nv._of(fd2).file.fdid == 0
+        assert nv.log.route(0, 0) == 0
+        nv.close(fd2)
+    finally:
+        nv.shutdown()
+
+
+def test_stale_migration_plan_for_retired_fdid_is_skipped():
+    """_migrate_route must not install an override for a fdid whose File is
+    gone — the fdid may already name a brand-new file whose route gate was
+    never frozen."""
+    from repro.core.router import Migration
+    pol = make_policy()
+    nv, _ = make_nv(pol)
+    try:
+        fd = nv.open("/f0")                  # fdid 0
+        nv.pwrite(fd, b"x" * 100, 0)
+        nv.close(fd)                         # retire fdid 0
+        assert not nv._migrate_route(Migration(0, 0, 0, 2, 40))
+        assert nv.router.table == {}
+        fd2 = nv.open("/reuse")              # reuses fdid 0
+        assert nv._of(fd2).file.fdid == 0
+        assert nv.log.route(0, 0) == 0       # untouched by the stale plan
+        nv.close(fd2)
+    finally:
+        nv.shutdown()
