@@ -1,9 +1,17 @@
-"""Fig. 3 — db_bench-style workloads over kvlite on the seven stacks.
+"""Fig. 3 — db_bench-style workloads over kvlite on the seven stacks,
+plus the journal-mode legacy workloads (PR 5).
 
 Write-heavy: fillseq / fillrandom / overwrite (synchronous mode — every put
 durable).  Read-heavy: readrandom / readseq.  The paper's claims checked:
 NVCache+SSD >= 1.9x over the other large-storage stacks (DM-WriteCache,
 SSD) on write-heavy loads; read-heavy roughly tied across stacks.
+
+``run_journal_workload`` drives the §IV application protocols through
+:mod:`repro.storage.legacy`: SQLite rollback-journal transactions (journal
+fsync + db fsync + unlink per txn), SQLite WAL transactions (WAL append +
+periodic checkpoint/ftruncate), and RocksDB-style sync puts (WAL fsync per
+put, MANIFEST rename + WAL unlink per flush) — metadata-heavy commit paths
+the durable namespace makes crash-safe over NVCache.
 """
 from __future__ import annotations
 
@@ -13,6 +21,7 @@ import numpy as np
 
 from benchmarks.backends import ALL_STACKS, make_stack
 from repro.storage.kvlite import KVLite
+from repro.storage.legacy import RocksLite, SQLiteRollbackDB, SQLiteWALDB
 
 VALUE = 4096
 KEY = 16
@@ -60,6 +69,62 @@ def run_workload(stack_name: str, workload: str, n_ops: int):
                 "mib_per_s": n_ops * VALUE / dt / (1 << 20)}
     finally:
         st.close()
+
+
+JOURNAL_MODELS = ["sqlite-rj", "sqlite-wal", "rocksdb"]
+
+
+def run_journal_workload(stack_name: str, model: str, n_txn: int):
+    """One journal-mode legacy workload on one stack; returns txn/s."""
+    st = make_stack(stack_name, log_mib=max(64, n_txn * 0.05))
+    try:
+        if model == "sqlite-rj":
+            db = SQLiteRollbackDB(st.fs, page_size=4096, npages=32)
+            t0 = time.perf_counter()
+            for t in range(1, n_txn + 1):
+                db.commit(t)
+            db.close()
+        elif model == "sqlite-wal":
+            db = SQLiteWALDB(st.fs, page_size=4096, npages=32)
+            t0 = time.perf_counter()
+            for t in range(1, n_txn + 1):
+                db.commit(t)
+                if t % 16 == 0:
+                    db.checkpoint()
+            db.close()
+        elif model == "rocksdb":
+            db = RocksLite(st.fs)
+            val = b"v" * 4096
+            t0 = time.perf_counter()
+            for i in range(1, n_txn + 1):
+                db.put(f"k{i % 97:08d}".encode(), val)
+                if i % 64 == 0:
+                    db.flush()
+            db.close()
+        else:
+            raise KeyError(model)
+        dt = time.perf_counter() - t0
+        row = {"stack": stack_name, "model": model, "txns": n_txn,
+               "seconds": dt, "txn_per_s": n_txn / dt}
+        if st.nv is not None:
+            s = st.nv.stats()
+            row["meta_ops"] = s["meta_ops"]
+            row["log_full_scans"] = s["log_full_scans"]
+        return row
+    finally:
+        st.close()
+
+
+def run_journal(n_txn: int = 300, stacks=("nvcache+ssd", "ssd"),
+                models=None):
+    rows = []
+    for model in (models or JOURNAL_MODELS):
+        for s in stacks:
+            rows.append(run_journal_workload(s, model, n_txn))
+            r = rows[-1]
+            print(f"fig3-journal/{model}/{s},{1e6 * r['seconds'] / n_txn:.1f}us,"
+                  f"{r['txn_per_s']:.0f}txn/s", flush=True)
+    return rows
 
 
 def run(n_ops: int = 2000, stacks=None, workloads=None):

@@ -1,21 +1,24 @@
 """CI entry point: run the PR's headline benchmarks and emit ONE
-machine-readable JSON (``BENCH_pr4.json``) so the perf trajectory of the
+machine-readable JSON (``BENCH_pr5.json``) so the perf trajectory of the
 repo is diffable from PR 2 onward.
 
-    PYTHONPATH=src python benchmarks/run_all.py [--out BENCH_pr4.json] [--quick]
+    PYTHONPATH=src python benchmarks/run_all.py [--out BENCH_pr5.json] [--quick]
 
-Emitted metrics (schema ``bench_schema: 4``):
+Emitted metrics (schema ``bench_schema: 5``):
 
-* ``skew`` — committed-write throughput of the Zipf-skewed 4-writer
-  workload at K=4 where the hot fdids collide on one shard under the
-  static ``fdid`` route, vs ``shard_rebalance=True`` (the epoch router
-  migrating hot fdids behind per-file drain barriers) — acceptance:
-  >= 1.5x; plus a uniform-workload guard showing the rebalancer idles
-  (hysteresis) when there is nothing to fix;
+* ``legacy`` — the §IV journal-mode legacy workloads over the durable
+  namespace (PR 5): SQLite rollback-journal (per-txn journal fsync +
+  hot-journal unlink commit point), SQLite WAL (append + checkpoint/
+  ftruncate reset) and RocksDB-style sync puts (WAL fsync per put,
+  MANIFEST rename-install per flush), each nvcache+ssd vs the sync-SSD
+  baseline;
+* ``skew`` — the PR-4 Zipf-skewed rebalancing figure (acceptance >= 1.5x
+  vs the static ``fdid`` route) plus the uniform guard;
 * ``cold_read`` / ``mixed`` / ``trickle`` / ``coalesce`` /
   ``fsync_epoch_hot_file`` / ``dirty_miss`` — the PR-2/PR-3 figures
   re-measured at this tip (all with ``shard_rebalance=False``, the static
-  paper baseline) so regressions stay visible.
+  paper baseline) so regressions stay visible.  ``cold_read`` now runs
+  with the PR-5 adaptive readahead ramp (2->4->8).
 """
 from __future__ import annotations
 
@@ -26,11 +29,13 @@ import sys
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks import fig8_coalescing, fig9_readpath, fig10_skew  # noqa: E402
+from benchmarks import (fig3_dbbench, fig8_coalescing, fig9_readpath,  # noqa: E402
+                        fig10_skew)
 
 
 def run(quick: bool = False) -> dict:
     total_mib = 4 if quick else 8
+    legacy = fig3_dbbench.run_journal(n_txn=60 if quick else 200)
     skew = fig10_skew.run_skew(total_mib=3 if quick else 10,
                                warmup_mib=1.5 if quick else 3.0)
     uniform = fig10_skew.run_uniform_guard(total_mib=3 if quick else 8)
@@ -40,6 +45,20 @@ def run(quick: bool = False) -> dict:
     rows = fig8_coalescing.run_coalesce_compare(total_mib=total_mib)
     epoch = fig8_coalescing.run_fsync_epoch(total_mib=2 if quick else 4)
     dm = fig8_coalescing.run_dirty_miss(n_pages=64 if quick else 192)
+
+    leg_by = {(r["model"], r["stack"]): r for r in legacy}
+
+    def _legacy_block(model):
+        nv = leg_by[(model, "nvcache+ssd")]
+        ssd = leg_by[(model, "ssd")]
+        return {
+            "txn_per_s": nv["txn_per_s"],
+            "txn_per_s_ssd": ssd["txn_per_s"],
+            "speedup_x_vs_ssd": nv["txn_per_s"] / max(1e-12,
+                                                      ssd["txn_per_s"]),
+            "meta_ops": nv.get("meta_ops"),
+            "log_full_scans": nv.get("log_full_scans"),
+        }
 
     skew_by = {r["mode"]: r for r in skew}
     uni_by = {r["mode"]: r for r in uniform}
@@ -53,8 +72,14 @@ def run(quick: bool = False) -> dict:
     ppb_tip = trickle_by["pr2-tip"]["backend_page_writes_per_committed_byte"]
     ppb_span = trickle_by["span-batches"]["backend_page_writes_per_committed_byte"]
     return {
-        "bench_schema": 4,
-        "pr": 4,
+        "bench_schema": 5,
+        "pr": 5,
+        "legacy": {
+            "sqlite_rollback_journal": _legacy_block("sqlite-rj"),
+            "sqlite_wal": _legacy_block("sqlite-wal"),
+            "rocksdb_style": _legacy_block("rocksdb"),
+            "detail": legacy,
+        },
         "skew": {
             "mib_per_s": skew_by["rebalance"]["mib_per_s"],
             "mib_per_s_static_fdid": skew_by["static-fdid"]["mib_per_s"],
@@ -109,7 +134,7 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-        "BENCH_pr4.json"))
+        "BENCH_pr5.json"))
     ap.add_argument("--quick", action="store_true",
                     help="smaller workload for CI smoke runs")
     args = ap.parse_args()
@@ -117,13 +142,17 @@ def main() -> None:
     with open(args.out, "w") as fh:
         json.dump(result, fh, indent=2, sort_keys=True)
         fh.write("\n")
-    print(f"wrote {args.out}: "
-          f"{result['skew']['rebalance_speedup_x']:.2f}x committed throughput "
-          f"on the skewed-fdid workload (rebalance vs static), "
+    leg = result["legacy"]
+    print(f"wrote {args.out}: legacy workloads over the durable namespace — "
+          f"SQLite rollback-journal "
+          f"{leg['sqlite_rollback_journal']['speedup_x_vs_ssd']:.1f}x, "
+          f"SQLite WAL {leg['sqlite_wal']['speedup_x_vs_ssd']:.1f}x, "
+          f"RocksDB-style {leg['rocksdb_style']['speedup_x_vs_ssd']:.1f}x "
+          f"vs sync SSD; "
+          f"{result['skew']['rebalance_speedup_x']:.2f}x skewed-fdid "
+          f"rebalance, "
           f"{result['cold_read']['read_op_reduction_x']:.1f}x fewer backend "
-          f"read ops/byte (ra=8 vs 1), "
-          f"{result['trickle']['page_write_reduction_x']:.1f}x fewer trickle "
-          f"page writes vs PR2 tip, "
+          f"read ops/byte (ramped ra=8 vs 1), "
           f"{result['coalesce']['committed_mib_s']:.1f} MiB/s committed",
           flush=True)
 

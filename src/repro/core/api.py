@@ -11,7 +11,12 @@ against libc, and transparently get
   * asynchronous propagation to the slow tier via the per-shard drain pool
     and its page-coalescing plan/apply engine (:mod:`repro.core.drain`),
   * ``fsync`` as a no-op (Table III: writes are already durable),
-  * user-space file size/cursor (the kernel's may be stale, §II-C).
+  * user-space file size/cursor (the kernel's may be stale, §II-C),
+  * durable namespace ops — ``rename``/``unlink``/``ftruncate`` (and the
+    implicit create in ``open``) journaled as metadata log entries so the
+    crash-consistency protocols of legacy apps (SQLite journal unlink,
+    RocksDB MANIFEST rename) survive power loss; see
+    :mod:`repro.core.namespace`.
 
 One instance == one NVMM region (one "DAX file"); several instances can
 coexist on separate regions (paper §III Multi-application).
@@ -20,10 +25,13 @@ from __future__ import annotations
 
 import os
 import threading
+import time
 from typing import Dict, Optional
 
 from repro.core.cleanup import CleanupPool
-from repro.core.log import NVLog
+from repro.core.log import (META_NO_FDID, MOP_CREATE, MOP_FTRUNCATE,
+                            MOP_RENAME, MOP_UNLINK, NVLog)
+from repro.core.namespace import Namespace
 from repro.core.nvmm import NVMM
 from repro.core.policy import Policy
 from repro.core.readcache import AtomicInt, LRUCache, RadixTree
@@ -40,7 +48,8 @@ class File:
 
     __slots__ = ("path", "fdid", "backend", "radix", "size", "size_lock",
                  "refs", "pending", "shards_touched", "_drained", "ra_next",
-                 "hwm", "_route_cv", "route_inflight", "route_frozen")
+                 "ra_window", "hwm", "_route_cv", "route_inflight",
+                 "route_frozen", "unlinked")
 
     def __init__(self, path: str, fdid: int, backend):
         self.path = path
@@ -58,6 +67,13 @@ class File:
         self.ra_next = -1                        # readahead stream detector:
         #   the page a sequential miss stream would miss next; racy by
         #   design (a heuristic, like the kernel's per-file ra window)
+        self.ra_window = 1                       # current ramped window size
+        #   (grows 2->4->... toward Policy.readahead_pages on a sustained
+        #    sequential miss stream, resets on a random miss)
+        self.unlinked = False                    # POSIX unlink-while-open:
+        #   the name is gone but the file lives until its last close; its
+        #   drain skips the backend fsync (the bytes die with the name on
+        #   any crash) and close() skips the drain barrier
         # route-epoch gate (adaptive routing only): writers enter before the
         # route lookup and exit after the log append, so a migration can
         # freeze the file and know no in-flight write still holds a stale
@@ -132,7 +148,7 @@ class NVCache:
         self.nvmm = nvmm or NVMM(policy.nvmm_bytes, track=track_crashes)
         if recover and nvmm is not None:
             try:
-                self.recovery_stats = _recovery.recover(self.nvmm, policy, tier.open)
+                self.recovery_stats = _recovery.recover(self.nvmm, policy, tier)
             except ValueError:
                 self.recovery_stats = None     # fresh region
                 NVLog(self.nvmm, policy, format=True)
@@ -142,12 +158,16 @@ class NVCache:
             self.log = NVLog(self.nvmm, policy, format=True)
 
         self.lru = LRUCache(policy.read_cache_pages, policy.page_size)
-        self._files: Dict[str, File] = {}
-        self._by_fdid: Dict[int, File] = {}
+        # the durable namespace owns the file tables (path→File, fdid→File,
+        # free fdid slots) and the metadata journaling protocol; the aliases
+        # below are the same mutable objects, kept under the historic names
+        self.ns = Namespace(self.log, tier, policy.fd_max)
+        self._files: Dict[str, File] = self.ns.files
+        self._by_fdid: Dict[int, File] = self.ns.by_fdid
         self._open: Dict[int, OpenFile] = {}
         self._next_fd = 3
-        self._meta = threading.Lock()
-        self._fdid_free = list(range(policy.fd_max - 1, -1, -1))
+        self._meta = self.ns.lock
+        self._fdid_free = self.ns.fdid_free
         # adaptive shard routing (beyond paper, see core/router.py): the
         # router is created AFTER the log so it adopts the persisted route
         # record of an attached region (and an empty one after a format)
@@ -158,7 +178,9 @@ class NVCache:
         self.cleanup = CleanupPool(self.log, self._resolve_fdid,
                                    router=self.router,
                                    migrate=self._migrate_route
-                                   if self.router is not None else None)
+                                   if self.router is not None else None,
+                                   meta_gate=self.ns,
+                                   reap=self._reap_file)
         self.cleanup.start()
         self._crashed = False
         self.stats_dirty_misses = 0
@@ -170,6 +192,19 @@ class NVCache:
     # ------------------------------------------------------------- lifecycle
     def _resolve_fdid(self, fdid: int) -> Optional[File]:
         return self._by_fdid.get(fdid)
+
+    def _reap_file(self, f: File) -> None:
+        """Drain-thread callback: an anonymous (unlinked) file's entries
+        all landed.  Try-lock only — a drain thread must never wait on
+        ``_meta`` (a writer holding it may itself be blocked on log space
+        that only this drain can free); a missed reap is reclaimed by the
+        ``flush()`` sweep or the fdid-exhaustion sweep in ``open()``."""
+        if not self._meta.acquire(blocking=False):
+            return
+        try:
+            self._maybe_retire_locked(f)
+        finally:
+            self._meta.release()
 
     def check(self) -> None:
         if self.cleanup.error is not None:
@@ -194,15 +229,22 @@ class NVCache:
         """Drain the whole log to the slow tier (used as a barrier)."""
         self.cleanup.request_drain()
         try:
-            for f in list(self._files.values()):
+            # _by_fdid covers every bound File, including anonymous
+            # (unlinked-while-open) ones that left the path table
+            for f in list(self._by_fdid.values()):
                 if not f.wait_drained(timeout=timeout):
                     raise TimeoutError(f"drain of {f.path} timed out")
+            # namespace records are not any File's pending entries: wait
+            # for them separately so "flush == the log is drained" holds
+            if not self.ns.wait_consumed(timeout=timeout):
+                raise TimeoutError("drain of namespace records timed out")
         finally:
             self.cleanup.end_drain()
         with self._meta:
-            # sweep files orphaned by a timed-out close barrier (refs 0,
-            # kept only so the drain could finish): they are drained now
-            for f in list(self._files.values()):
+            # sweep files orphaned by a timed-out close barrier or an
+            # unlink-while-open (refs 0, kept only so the drain could
+            # finish): they are drained now
+            for f in list(self._by_fdid.values()):
                 if f.refs == 0:
                     self._maybe_retire_locked(f)
         self.check()
@@ -212,16 +254,39 @@ class NVCache:
         self.check()
         accmode = flags & _ACCMODE
         with self._meta:
-            f = self._files.get(path)
+            f = self.ns.lookup(path)
             if f is None:
-                backend = self.tier.open(path)
+                created = not self.tier.exists(path)
+                if created and not flags & O_CREAT:
+                    raise FileNotFoundError(path)
                 if not self._fdid_free:
-                    raise OSError("fd table full")
-                fdid = self._fdid_free.pop()
-                self.log.fd_table_set(fdid, path)   # durable path for recovery
+                    # reclaim drained anonymous/orphaned files whose reap
+                    # lost the _meta try-lock race before giving up
+                    for g in list(self._by_fdid.values()):
+                        if g.refs == 0:
+                            self._maybe_retire_locked(g)
+                fdid = self.ns.alloc_fdid()
+                marks = None
+                try:
+                    self.log.fd_table_set(fdid, path)   # durable path for recovery
+                    if created:
+                        # journal the create BEFORE the backend file exists
+                        # (WAL rule): a crash after this point re-creates
+                        # the path from the log even if the kernel lost the
+                        # directory update
+                        marks, mseq = self.ns.journal(MOP_CREATE, fdid, 0,
+                                                      path)
+                    backend = self.tier.open(path)
+                    if created:
+                        self.ns.note_backend_applied(mseq)
+                except BaseException:
+                    self.ns.free_fdid(fdid)             # nothing references it
+                    raise
+                finally:
+                    if marks is not None:
+                        self.ns.mark_applied(marks)
                 f = File(path, fdid, backend)
-                self._files[path] = f
-                self._by_fdid[fdid] = f
+                self.ns.bind(path, f)
             if accmode != O_RDONLY and f.radix is None:
                 f.radix = RadixTree()               # read cache only for writers
             f.refs += 1
@@ -256,56 +321,100 @@ class NVCache:
         self._maybe_retire_locked(f)
 
     def _maybe_retire_locked(self, f: File) -> None:
-        if (f.refs == 0 and f.pending.get() <= 0
-                and self._files.get(f.path) is f):
+        if f.refs != 0 or f.pending.get() > 0:
+            return
+        if f.unlinked:
+            # anonymous (name already removed at unlink time): only the
+            # fdid binding remains, kept so the drain could resolve it
+            if self._by_fdid.get(f.fdid) is not f:
+                return
+            self._by_fdid.pop(f.fdid, None)
+        else:
+            if self._files.get(f.path) is not f:
+                return
             self._files.pop(f.path, None)
             self._by_fdid.pop(f.fdid, None)
-            self.log.fd_table_set(f.fdid, "")   # retire the NVMM slot
-            if self.router is not None:
-                # the file is drained (pending <= 0), so its overrides can
-                # revert to static without stranding entries; keeping them
-                # would leak table slots and mis-route a reused fdid
-                self.router.drop_fdid(f.fdid)
-            self._fdid_free.append(f.fdid)
-            f.backend.close()
+        self.log.fd_table_set(f.fdid, "")   # retire the NVMM slot
+        if self.router is not None:
+            # the file is drained (pending <= 0), so its overrides can
+            # revert to static without stranding entries; keeping them
+            # would leak table slots and mis-route a reused fdid
+            self.router.drop_fdid(f.fdid)
+        self._fdid_free.append(f.fdid)
+        f.backend.close()
 
-    def _truncate_file(self, f: File) -> None:
-        """O_TRUNC: make the file empty *everywhere*, not just the backend.
+    def _truncate_file(self, f: File, length: int = 0) -> None:
+        """Set the file's length *everywhere*, not just the backend
+        (``O_TRUNC`` is ``length == 0``; ``ftruncate`` passes any length).
 
         Undrained log entries, dirty-page-index refs and loaded page
         contents all hold pre-truncate bytes; truncating only the backend
         let a later drain resurrect them and let cached reads serve stale
         data.  Order: drain the file's touched shards first (consuming its
         entries durably, exactly as ``close`` does — so a crash after this
-        point cannot replay pre-truncate bytes either), then purge the
-        radix refs/contents under the page locks, then truncate the
-        backend and the user-space size."""
-        self._drain_barrier(f, "O_TRUNC")
-        # order matters: size to 0 first (readers clamp against it, so no
-        # new read can reach the backend), then truncate the backend, then
-        # purge — a reader that re-cached a pre-truncate page between the
-        # drain and here is cleaned up by the purge.  A load whose desc the
-        # purge walk could miss (inserted only while the walk runs) is
-        # necessarily harmless: its backend pread happens after the
-        # truncate below and reads zeros, while any load that read the
-        # backend *before* the truncate inserted its desc before the walk
-        # began and is purged under its page locks.
+        point cannot replay pre-truncate bytes either), journal the new
+        length as a metadata log entry (the durable intent recovery
+        replays, seq-ordered after every covered data entry), then purge
+        the radix refs/contents beyond the new length under the page
+        locks, then truncate the backend and the user-space size."""
         with f.size_lock:
-            f.size = 0
-            f.hwm = 0
-        f.backend.truncate(0)
-        if f.radix is not None:
-            for d in f.radix.iter_descs():
-                with d.atomic_lock, d.cleanup_lock:
-                    if d.content is not None:
-                        d.content.desc = None     # LRU reclaims it as free
-                        d.content = None
-                    d.prefetched = False
-                    # refs are NOT cleared here: the drain barrier above
-                    # already retired every pre-truncate ref, so any ref
-                    # present now belongs to a write committed *after* the
-                    # barrier by a concurrent fd — clearing it would blind
-                    # readers to an entry the drain will still land
+            cur = f.size
+        if cur == length and f.backend.size() == length:
+            return                            # nothing to cut or extend
+        self._drain_barrier(f, "ftruncate")
+        # journal under _meta like every namespace op (the Namespace lock
+        # invariant): otherwise a concurrent unlink-while-open could slip
+        # between the f.unlinked check and the journal append, and recovery
+        # would replay the MOP_FTRUNCATE *after* the unlink — re-creating
+        # the dead path as a length-L file
+        with self._meta:
+            if f.unlinked:
+                # anonymous file: no name to journal under (and none
+                # needed — the file is gone after any crash)
+                marks = None
+            else:
+                marks, mseq = self.ns.journal(MOP_FTRUNCATE, f.fdid,
+                                              length, f.path)
+        try:
+            # order matters: size first (readers clamp against it, so no
+            # new read can reach the cut bytes), then truncate the backend,
+            # then purge — a reader that re-cached a pre-truncate page
+            # between the drain and here is cleaned up by the purge.  A
+            # load whose desc the purge walk could miss (inserted only
+            # while the walk runs) is necessarily harmless: its backend
+            # pread happens after the truncate below and reads zeros, while
+            # any load that read the backend *before* the truncate inserted
+            # its desc before the walk began and is purged under its locks.
+            with f.size_lock:
+                f.size = length
+                f.hwm = min(f.hwm, length)
+            f.backend.truncate(length)
+            if f.radix is not None:
+                ps = self.policy.page_size
+                first_cut = -(-length // ps)      # first wholly-cut page
+                for d in f.radix.iter_descs():
+                    if d.page_no < first_cut - 1:
+                        continue                  # untouched by the cut
+                    with d.atomic_lock, d.cleanup_lock:
+                        if d.page_no >= first_cut and d.content is not None:
+                            d.content.desc = None  # LRU reclaims it as free
+                            d.content = None
+                            d.prefetched = False
+                        elif d.content is not None and length % ps:
+                            # boundary page survives: zero its cut tail so
+                            # a later size-growing write reads zeros there
+                            d.content.data[length % ps:] = \
+                                bytes(ps - length % ps)
+                        # refs are NOT cleared here: the drain barrier above
+                        # already retired every pre-truncate ref, so any ref
+                        # present now belongs to a write committed *after*
+                        # the barrier by a concurrent fd — clearing it would
+                        # blind readers to an entry the drain will still land
+            if marks is not None:
+                self.ns.note_backend_applied(mseq)
+        finally:
+            if marks is not None:
+                self.ns.mark_applied(marks)
 
     def _drain_barrier(self, f: File, label: str,
                        timeout: float = 60.0) -> None:
@@ -356,7 +465,12 @@ class NVCache:
         of = self._pop_fd(fd)
         f = of.file
         try:
-            self._drain_barrier(f, "close")
+            if not f.unlinked:
+                # an unlinked (anonymous) file dies with its last close:
+                # nothing to make coherent for other processes, so no
+                # barrier — its remaining entries drain (fsync-free) in
+                # the background and the reap retires the fdid
+                self._drain_barrier(f, "close")
         finally:
             # teardown must run even when the drain barrier fails: the fd
             # was already popped, so skipping the refcount would leak the
@@ -563,7 +677,7 @@ class NVCache:
         return bytes(out)
 
     def _extent_range(self, f: File, p: int) -> tuple:
-        """Aligned readahead window [e0, e1) around page ``p``: up to
+        """Readahead window [e0, e1) around page ``p``: up to
         ``Policy.readahead_pages`` pages (clamped to half the read cache so
         a load can never flush the cache it feeds), clipped to the file's
         last page.
@@ -571,16 +685,30 @@ class NVCache:
         Readahead opens only for a *sequential* miss stream (``p`` is the
         page the previous miss predicted, kernel-style): a random miss
         loads just its own page, so random workloads never pay device cost
-        for 7 prefetched pages they will evict unused."""
-        ra = min(self.policy.readahead_pages, max(1, self.lru.capacity // 2))
-        if ra <= 1 or p != f.ra_next:
+        for 7 prefetched pages they will evict unused.
+
+        With ``Policy.readahead_ramp`` (the default) the window *ramps*
+        like the kernel's: the first sequential miss after a reset loads 2
+        pages, then 4, then 8 ... up to the cap, and any random miss
+        resets the ramp — a short sequential burst pays for 2-4 pages
+        instead of the full window it would never use.  ``ramp=False``
+        keeps the PR-3 behavior: the full aligned window on the first
+        sequential miss."""
+        cap = min(self.policy.readahead_pages, max(1, self.lru.capacity // 2))
+        if cap <= 1 or p != f.ra_next:
             f.ra_next = p + 1
+            f.ra_window = 1                   # random miss: reset the ramp
             return p, p + 1
-        e0 = (p // ra) * ra
         with f.size_lock:
             size = f.size
         last = (size - 1) // self.policy.page_size if size > 0 else 0
-        e1 = max(p + 1, min(e0 + ra, last + 1))
+        if self.policy.readahead_ramp:
+            w = min(cap, max(2, 2 * f.ra_window))
+            f.ra_window = w
+            e0, e1 = p, max(p + 1, min(p + w, last + 1))
+        else:
+            e0 = (p // cap) * cap
+            e1 = max(p + 1, min(e0 + cap, last + 1))
         f.ra_next = e1
         return e0, e1
 
@@ -688,6 +816,118 @@ class NVCache:
         """No-op: writes are already synchronously durable (Table III)."""
         self._of(fd)
 
+    # -- durable namespace ops (core/namespace.py): each quiesces the
+    #    touched file(s) behind the drain barrier, journals the op as a
+    #    committed NVMM log entry, then applies the backend effect — so an
+    #    acknowledged rename/unlink/ftruncate survives any crash, and
+    #    recovery's seq-merge replays it old-or-new, never torn.
+    def _lookup_closed_locked(self, path: str) -> Optional[File]:
+        """The File at ``path`` verified to have no open descriptors
+        (namespace ops refuse open files — the legacy protocols we model
+        close before rename/unlink).  Caller holds ``_meta``."""
+        f = self._files.get(path)
+        if f is not None and f.refs > 0:
+            raise OSError(f"{path} is open (EBUSY)")
+        return f
+
+    def unlink(self, path: str) -> None:
+        """Remove ``path`` (the SQLite rollback-journal commit point).
+
+        The journal record commits BEFORE the backend unlink, so a crash
+        at any point leaves the file either present (op not acknowledged)
+        or durably gone — its bytes can never resurrect: recovery replays
+        the unlink at a seq above every covered data entry.
+
+        POSIX unlink-while-open: with live descriptors the *name* is
+        removed now and the file turns anonymous — reads/writes through
+        open fds keep working, the file is reclaimed at its last close,
+        and after a crash it is simply gone (its post-unlink writes are
+        dropped as orphans: the fd-table slot is cleared with the name).
+        This is what lets SQLite delete a hot journal without first paying
+        a close barrier, and what makes the journal's drain skip the
+        backend fsync entirely (see ``File.unlinked``)."""
+        self.check()
+        with self._meta:
+            f = self._files.get(path)
+            if f is None and not self.tier.exists(path):
+                raise FileNotFoundError(path)
+            marks, mseq = self.ns.journal(
+                MOP_UNLINK, f.fdid if f is not None else META_NO_FDID,
+                0, path)
+            try:
+                if f is not None:
+                    f.unlinked = True
+                    self._files.pop(path, None)    # fdid stays bound
+                    # undrained and post-unlink entries die with a crash
+                    # (POSIX): clearing the slot makes recovery drop them
+                    # as orphans instead of re-creating the dead name —
+                    # the unlink record above outranks them all by seq
+                    self.log.fd_table_set(f.fdid, "")
+                self.tier.unlink(path)
+                self.ns.note_backend_applied(mseq)
+                if f is not None:
+                    # closed and already drained: reclaim on the spot;
+                    # otherwise the drain's reap (or the flush sweep)
+                    # retires it once its entries are consumed
+                    self._maybe_retire_locked(f)
+            finally:
+                self.ns.mark_applied(marks)
+        self.check()
+
+    def rename(self, old: str, new: str) -> None:
+        """Atomically move ``old`` over ``new`` (the RocksDB MANIFEST
+        install).  Both paths must have no open descriptors; an existing
+        ``new`` is replaced, and after recovery the data is attributed to
+        exactly one of the two names — never both, never neither."""
+        self.check()
+        if old == new:
+            with self._meta:
+                if (self._files.get(old) is None
+                        and not self.tier.exists(old)):
+                    raise FileNotFoundError(old)
+            return
+        deadline = time.monotonic() + 120.0
+        while True:
+            with self._meta:
+                fo = self._lookup_closed_locked(old)
+                fn = self._lookup_closed_locked(new)
+                if fo is None and not self.tier.exists(old):
+                    raise FileNotFoundError(old)
+                stale = fo if (fo is not None and fo.pending.get() > 0) \
+                    else (fn if (fn is not None and fn.pending.get() > 0)
+                          else None)
+                if stale is None:
+                    marks, mseq = self.ns.journal(
+                        MOP_RENAME,
+                        fo.fdid if fo is not None else META_NO_FDID, 0,
+                        old, new)
+                    try:
+                        if fo is not None:
+                            self._maybe_retire_locked(fo)
+                        if fn is not None:
+                            self._maybe_retire_locked(fn)
+                        self.tier.rename(old, new)
+                        self.ns.note_backend_applied(mseq)
+                    finally:
+                        self.ns.mark_applied(marks)
+                    self.check()
+                    return
+            self._drain_barrier(stale, "rename")
+            if time.monotonic() > deadline:
+                raise TimeoutError(f"rename {old} -> {new} could not quiesce")
+
+    def ftruncate(self, fd: int, length: int) -> None:
+        """Set the open file's length (SQLite WAL reset).  Journaled like
+        rename/unlink; shrinking purges cached/dirty state beyond the new
+        length so cut bytes never resurrect, growing zero-fills."""
+        of = self._of(fd)
+        if of.flags & _ACCMODE == O_RDONLY:
+            raise OSError("fd is read-only")
+        if length < 0:
+            raise OSError("negative length (EINVAL)")
+        self._truncate_file(of.file, length)
+        self.check()
+
     def flock(self, fd: int, unlock: bool = False) -> None:
         """Advisory lock hook (paper §I): releasing a lock flushes this
         file's pending writes to the kernel so other processes see them."""
@@ -763,4 +1003,8 @@ class NVCache:
                                  if self.cleanup.rebalancer else 0),
             "route_skew_ratio": (self.router.stats_skew_ratio
                                  if self.router else 0.0),
+            "route_skipped_uneconomic": (self.router.stats_skipped_uneconomic
+                                         if self.router else 0),
+            "meta_ops": dict(self.ns.stats_meta_ops),
+            "meta_entries": self.ns.stats_meta_entries,
         }

@@ -53,7 +53,7 @@ from typing import Callable, Iterable, Optional
 
 from repro.core import drain as _drain
 from repro.core.drain import FsyncEpochScheduler
-from repro.core.log import LogShard, NVLog
+from repro.core.log import CG_HEAD, META_FDID, LogShard, NVLog
 
 
 class CleanupThread(threading.Thread):
@@ -62,12 +62,17 @@ class CleanupThread(threading.Thread):
     def __init__(self, log: NVLog, shard: LogShard,
                  resolve_file: Callable[[int], Optional[object]],
                  *, fsync_scheduler: Optional[FsyncEpochScheduler] = None,
+                 meta_gate=None, reap: Optional[Callable] = None,
                  name: Optional[str] = None):
         super().__init__(name=name or f"nvcache-drain-{shard.sid}", daemon=True)
         self.log = log
         self.shard = shard
         self.resolve_file = resolve_file      # fdid -> File (api.File) or None
         self.fsync_scheduler = fsync_scheduler
+        self.meta_gate = meta_gate            # namespace (or None): blocks
+        #   consumption of committed-but-not-yet-applied metadata entries
+        self.reap = reap                      # owner callback to reclaim a
+        #   fully-drained anonymous (unlinked) file; must never block
         self.drain_event = threading.Event()  # ignore batch_min
         self.stop_event = threading.Event()   # finish current batch, then exit
         self.hard_stop = threading.Event()    # simulated power loss: exit NOW
@@ -122,10 +127,28 @@ class CleanupThread(threading.Thread):
             self.fault_hook(tag)
         return self.hard_stop.is_set()
 
+    def _clip_unapplied(self, start: int, run: int) -> int:
+        """Stop the batch short of the first committed metadata entry whose
+        backend effect is not applied yet (the journal→apply window of
+        :mod:`repro.core.namespace`): consuming it would let a crash lose a
+        namespace op the log still owes the backend.  The window is
+        microseconds wide, so the clipped remainder drains on the next
+        round."""
+        for e in self.shard.scan_committed(start, start + run):
+            if (e.cg == CG_HEAD and e.fdid == META_FDID
+                    and self.meta_gate.meta_blocked(self.shard.sid, e.idx)):
+                return e.idx - start
+        return run
+
     def _consume_batch(self, run: int) -> None:
         shard = self.shard
         pol = self.log.policy
         start = shard.persistent_tail
+        if self.meta_gate is not None and self.meta_gate.has_unapplied():
+            run = self._clip_unapplied(start, run)
+            if run == 0:                      # blocked at the very tail:
+                time.sleep(1e-3)              # wait out the apply window
+                return
         # phase 0: batch-spanning coalescing — leave the contiguous tail
         # extent unconsumed (its consume/ref-retire deferred until it is
         # flushed) so the next batch's contiguous entries merge into one
@@ -149,6 +172,11 @@ class CleanupThread(threading.Thread):
         if self._abort(_drain.FSYNC):
             return
         for f in drained:
+            if getattr(f, "unlinked", False):
+                continue    # anonymous (unlinked-while-open) file: its
+                #             bytes die with the name on any crash, so
+                #             device durability buys nothing — this skip is
+                #             what makes deleting a hot journal cheap
             self.stats_fsyncs += 1            # one request per file per batch
             if self.fsync_scheduler is not None:
                 self.fsync_scheduler.fsync(f.backend)
@@ -157,6 +185,8 @@ class CleanupThread(threading.Thread):
         if self._abort(_drain.CONSUME):
             return
         shard.consume(start, eff)             # durably retire the batch
+        if self.meta_gate is not None and plan.meta_entries:
+            self.meta_gate.note_consumed(shard.sid, start, eff)
         if carried and (run > carried or self._span_carry_batches > 1):
             # a real cross-batch write-combine: the plan joined carried
             # entries with newer ones, or flushed a carry that accumulated
@@ -165,6 +195,12 @@ class CleanupThread(threading.Thread):
             self.stats_span_merges += 1
         for f, n in drained.items():
             f.note_drained(n)
+            if (self.reap is not None and getattr(f, "unlinked", False)
+                    and f.refs == 0 and f.pending.get() <= 0):
+                # last entries of a dead anonymous file just landed: give
+                # the owner a chance to reclaim its fdid without waiting
+                # for the next flush() sweep
+                self.reap(f)
         self.stats_entries += sum(drained.values())
         self.stats_batches += 1
         self._note_deferred(start + eff, defer)
@@ -308,12 +344,14 @@ class CleanupPool:
 
     def __init__(self, log: NVLog,
                  resolve_file: Callable[[int], Optional[object]],
-                 *, router=None, migrate: Optional[Callable] = None):
+                 *, router=None, migrate: Optional[Callable] = None,
+                 meta_gate=None, reap: Optional[Callable] = None):
         self.log = log
         self.fsync_scheduler = FsyncEpochScheduler(
             enabled=log.policy.fsync_epoch)
         self.threads = [CleanupThread(log, sh, resolve_file,
-                                      fsync_scheduler=self.fsync_scheduler)
+                                      fsync_scheduler=self.fsync_scheduler,
+                                      meta_gate=meta_gate, reap=reap)
                         for sh in log.shards]
         self.rebalancer: Optional[RebalanceThread] = None
         if router is not None and migrate is not None:

@@ -39,7 +39,7 @@ from __future__ import annotations
 import threading
 from typing import Callable, Dict, List, Optional
 
-from repro.core.log import CG_HEAD, LogShard
+from repro.core.log import CG_HEAD, META_FDID, LogShard
 from repro.core.policy import Policy
 
 # fault-injection / power-loss checkpoint tags, in batch order
@@ -83,7 +83,7 @@ class FilePlan:
 class DrainPlan:
     """Phase-1 output: per-file extent lists for one batch of one shard."""
 
-    __slots__ = ("sid", "start", "run", "files", "orphans")
+    __slots__ = ("sid", "start", "run", "files", "orphans", "meta_entries")
 
     def __init__(self, sid: int, start: int, run: int):
         self.sid = sid
@@ -91,6 +91,10 @@ class DrainPlan:
         self.run = run
         self.files: List[FilePlan] = []
         self.orphans = 0              # entries whose file is gone (dropped)
+        self.meta_entries = 0         # namespace records in the batch (their
+        #                               backend effect is already applied —
+        #                               the caller's gate guarantees it — so
+        #                               the drain only retires them)
 
 
 class _PageImage:
@@ -176,6 +180,10 @@ def choose_deferred_suffix(shard: LogShard, start: int, run: int,
     defer = 0
     lo = hi = fdid = None
     for cnt, fid, glo, ghi in reversed(groups):
+        if fid == META_FDID:
+            break                       # namespace record: never carried (it
+            #                             is not file bytes, and holding it
+            #                             back would delay its retirement)
         if ghi <= glo:
             break                       # empty group: nothing to carry
         if lo is None:
@@ -208,6 +216,9 @@ def build_plan(shard: LogShard, start: int, run: int,
     for e in shard.scan_committed(start, start + run):
         if abort is not None and abort(PLAN_ENTRY):
             return None
+        if e.fdid == META_FDID:
+            plan.meta_entries += 1    # applied namespace record: retire only
+            continue
         f = resolve_file(e.fdid)
         if f is None:                   # orphan (file force-closed): drop
             plan.orphans += 1

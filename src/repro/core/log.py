@@ -72,6 +72,47 @@ assert _HDR.size <= HDR_SIZE
 CG_FREE = 0
 CG_HEAD = 1
 
+# ---------------------------------------------------------------- metadata
+# Namespace (metadata) operations are first-class log entries: they carry
+# the sentinel fdid below instead of a real file-table slot, and their
+# payload is a :data:`_META`-encoded record instead of file bytes.  They
+# commit through the exact same per-shard alloc/fill/commit protocol as
+# data writes — drawing a global ``seq`` under the shard allocation lock —
+# so recovery's cross-shard seq-merge serializes them against every data
+# group (see :mod:`repro.core.namespace` for the protocol and its
+# old-or-new guarantee).
+META_FDID = 0xFFFF_FFFF            # u32 sentinel; real fdids are < fd_max
+META_NO_FDID = 0xFFFF_FFFE         # payload fdid for ops on paths with no
+#                                    live File (a closed, fully-drained
+#                                    file): no in-log data group can carry
+#                                    it, so recovery's dead-fdid tracking
+#                                    ignores it (0 is a REAL fdid slot)
+
+MOP_CREATE = 1                     # bind a path into the namespace
+MOP_RENAME = 2                     # atomically move path a over path b
+MOP_UNLINK = 3                     # remove path a
+MOP_FTRUNCATE = 4                  # set path a's length to aux
+
+_META = struct.Struct("<BIQHH")    # op, fdid, aux, len(a), len(b)
+
+
+def encode_meta(op: int, fdid: int, aux: int, a: str, b: str = "") -> bytes:
+    ra, rb = a.encode(), b.encode()
+    return _META.pack(op, fdid, aux, len(ra), len(rb)) + ra + rb
+
+
+def decode_meta(payload: bytes) -> tuple[int, int, int, str, str]:
+    """Returns ``(op, fdid, aux, a, b)``; raises ValueError on a payload
+    that does not parse (recovery drops such groups whole)."""
+    if len(payload) < _META.size:
+        raise ValueError("short metadata payload")
+    op, fdid, aux, la, lb = _META.unpack_from(payload)
+    if len(payload) < _META.size + la + lb:
+        raise ValueError("truncated metadata payload")
+    a = bytes(payload[_META.size:_META.size + la]).decode()
+    b = bytes(payload[_META.size + la:_META.size + la + lb]).decode()
+    return op, fdid, aux, a, b
+
 
 class LogFullTimeout(RuntimeError):
     pass
@@ -94,6 +135,11 @@ class Entry:
         self.nfollow = nfollow
         self.crc = crc
         self.data = data  # memoryview of length bytes (valid until recycled)
+
+    @property
+    def is_meta(self) -> bool:
+        """A namespace (metadata) entry rather than file data."""
+        return self.fdid == META_FDID
 
 
 class EntryRef:
@@ -335,6 +381,14 @@ class LogShard:
                     return run
                 if deadline_at is not None and time.monotonic() >= deadline_at:
                     return run
+                with self._lock:
+                    used = self.head - self.volatile_tail
+                if 2 * used >= self.n:
+                    # log-full backpressure: writers may be blocked on
+                    # recycling while the ready run is below batch_min
+                    # (e.g. a small group ahead of one that exceeds
+                    # batch_max) — never idle on a starving shard
+                    return run
             if stop_event.is_set():
                 return run
             timeout = poll
@@ -532,6 +586,30 @@ class NVLog:
         cb = None if on_alloc is None else (
             lambda head, k, seq: on_alloc(sid, head, k, seq))
         head, k, seq = self.shards[sid].append(fdid, off, data,
+                                               seq_source=self.next_seq,
+                                               timeout=timeout,
+                                               on_alloc=cb)
+        return sid, head, k, seq
+
+    def append_meta(self, payload: bytes, *, route_key: str = "",
+                    timeout: Optional[float] = None,
+                    on_alloc=None) -> tuple[int, int, int, int]:
+        """Commit one namespace (metadata) record as a log entry group.
+
+        The record routes by a hash of its primary path — metadata ops
+        never overlap data writes in the log-ordering sense (the caller
+        quiesces the file behind the drain barrier first), so any shard is
+        sound; hashing spreads unrelated namespace traffic.  The global
+        ``seq`` drawn inside the shard lock is what orders the op against
+        every data group for recovery's merge.  ``on_alloc(sid, head, k,
+        seq)`` runs pre-commit, exactly like the data path's hook — the
+        namespace registers its not-yet-applied marker there, before the
+        drain can possibly see the entry.
+        """
+        sid = zlib.crc32(route_key.encode()) % self.policy.shards
+        cb = None if on_alloc is None else (
+            lambda head, k, seq: on_alloc(sid, head, k, seq))
+        head, k, seq = self.shards[sid].append(META_FDID, 0, payload,
                                                seq_source=self.next_seq,
                                                timeout=timeout,
                                                on_alloc=cb)

@@ -90,6 +90,13 @@ class Policy:
     # The effective extent is clamped to half the read cache so readahead
     # can never flush the cache it feeds.
     readahead_pages: int = 8
+    # adaptive window ramp (kernel-style): a fresh sequential miss stream
+    # starts with a 2-page extent and doubles (2 -> 4 -> 8 ...) up to
+    # ``readahead_pages`` while the stream stays sequential; any random
+    # miss resets the ramp.  Short sequential bursts thus stop paying the
+    # full-window device cost.  False == PR-3 behavior (full aligned
+    # window on the first sequential miss).
+    readahead_ramp: bool = True
     # adaptive shard routing (see module docstring): epoch-based rebalancer
     # migrating hot route keys (fdids, or (fdid, stripe) pairs) to lighter
     # shards.  False == the static routes above, bit-identical to PR 3.
@@ -211,6 +218,7 @@ PAPER_DEFAULT = Policy(
     fsync_epoch=False,
     coalesce_span_batches=False,
     readahead_pages=1,
+    readahead_ramp=False,
 )
 
 #: Small configuration for unit/property tests.

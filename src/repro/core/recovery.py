@@ -30,13 +30,23 @@ Failure semantics of the replay itself:
   closed, only files whose groups ALL replayed are fsynced, the log is NOT
   reformatted (the exception propagates and ``recover`` can be retried —
   replay is idempotent), and the original exception is re-raised.
+* **Namespace records replay seq-merged with the data groups**
+  (:mod:`repro.core.namespace`): a create/rename/unlink/ftruncate entry is
+  applied to the backend namespace at its position in the global seq
+  order, so data written before a rename is attributed to the renamed
+  file, an unlinked file's bytes never resurrect (the op's drain barrier
+  put every covered data entry below its seq), and a re-created path
+  starts fresh.  Each replay is idempotent; a torn record is dropped whole
+  like any torn group (the namespace is old-or-new, never torn).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List
+from typing import Dict, List
 
-from repro.core.log import CG_HEAD, Entry, NVLog
+from repro.core.log import (CG_HEAD, META_FDID, META_NO_FDID, MOP_CREATE,
+                            MOP_FTRUNCATE, MOP_RENAME, MOP_UNLINK, Entry,
+                            NVLog, decode_meta)
 from repro.core.nvmm import NVMM
 from repro.core.policy import Policy
 from repro.core.router import load_route_record
@@ -53,15 +63,32 @@ class RecoveryStats:
     shards: int = 1
     groups_merged: int = 0
     route_epoch: int = 0         # routing epoch persisted at crash time
+    meta_ops: int = 0            # namespace records replayed (seq-merged)
+    meta_skipped: int = 0        # records at/below the backend's applied
+    #                              watermark (already reflected in it)
+    unlinked_dropped: int = 0    # data groups of an unlinked fdid committed
+    #                              after its unlink (POSIX: they died with
+    #                              the name — replaying them would re-create
+    #                              the dead path around a racing writer)
 
 
 def recover(nvmm: NVMM, policy: Policy,
-            open_backend: Callable[[str], object]) -> RecoveryStats:
+            backend) -> RecoveryStats:
     """Replay the log into the slow tier and reset the region.
 
-    ``open_backend(path)`` must return a backend file object with
-    ``pwrite(data, off)``, ``fsync()`` and ``close()``.
+    ``backend`` is either a tier-like object (``open(path)`` plus the
+    namespace surface ``exists``/``unlink``/``rename`` used to replay
+    metadata records) or a bare ``open_backend(path)`` callable — the
+    historic signature, still accepted; a bound ``Tier.open`` exposes its
+    tier through ``__self__``, and a region with no namespace records
+    never needs more than ``open``.
     """
+    if hasattr(backend, "open"):
+        tier, open_backend = backend, backend.open
+    else:
+        open_backend = backend
+        owner = getattr(backend, "__self__", None)
+        tier = owner if hasattr(owner, "unlink") else None
     log = NVLog(nvmm, policy, format=False, adopt=False)
     stats = RecoveryStats(shards=policy.shards)
     stats.route_epoch, _ = load_route_record(nvmm, policy)
@@ -96,22 +123,79 @@ def recover(nvmm: NVMM, policy: Policy,
         if bad or len(entries) != 1 + entries[0].nfollow:
             stats.groups_dropped += 1
             continue
+        if entries[0].fdid == META_FDID:
+            try:   # a namespace record must also parse; torn == dropped whole
+                decode_meta(b"".join(bytes(e.data) for e in entries))
+            except ValueError:
+                stats.groups_dropped += 1
+                continue
         valid.append((seq, sid, entries))
 
-    # phase 3: replay in merge order.  ``last_group`` lets the failure path
-    # tell which files had already fully replayed when a backend call threw.
+    # phase 3: replay in merge order.  Namespace records replay seq-merged
+    # with the data groups — the merge is what rebuilds the namespace
+    # old-or-new: data written before a rename lands under the old binding
+    # that the rename then moves, an unlink deletes everything below its
+    # seq, and a later re-create starts the path fresh.  Every namespace
+    # replay is idempotent (the op may have been applied just before the
+    # crash, or by an earlier recover() attempt that failed midway).
+    # ``last_group`` lets the failure path tell which files had already
+    # fully replayed when a backend call threw.
     files: Dict[str, object] = {}
     last_group: Dict[str, int] = {}
     for gi, (_seq, _sid, entries) in enumerate(valid):
+        if entries[0].fdid == META_FDID:
+            _op, _f, _aux, a, b = decode_meta(
+                b"".join(bytes(e.data) for e in entries))
+            last_group[a] = gi
+            if b:
+                last_group[b] = gi
+            continue
         path = log.fd_table_get(entries[0].fdid)
         if path is not None:
             last_group[path] = gi
+    # the backend's applied watermark: the seq of the last namespace op it
+    # already reflects (a journaling backend records it as part of the op).
+    # Replaying an op at/below it is NOT idempotent — the backend state has
+    # moved past it (its covered data drained, its paths re-created) and a
+    # second rename/unlink would tear exactly what the first one built.
+    ns_seq = getattr(tier, "ns_seq", 0)
+    # dead-fdid barrier: once an unlink of fdid F is processed (replayed OR
+    # already applied), any LATER data group still carrying F belongs to
+    # the anonymous (unlinked-while-open) file and died with the name — a
+    # writer racing the unlink's fd-table clear could otherwise resurrect
+    # the path holding only its own bytes.  A later MOP_CREATE re-binding F
+    # lifts the barrier (fdid reuse after the old file drained; the create
+    # is in the same shard as the unlink, so it can never be consumed while
+    # the unlink survives in the log).
+    dead: Dict[int, str] = {}
     done_groups = 0
     try:
-        for gi, (_seq, _sid, entries) in enumerate(valid):
+        for gi, (seq, _sid, entries) in enumerate(valid):
+            if entries[0].fdid == META_FDID:
+                op, mfdid, _aux, a, _b = decode_meta(
+                    b"".join(bytes(e.data) for e in entries))
+                if op == MOP_UNLINK and mfdid != META_NO_FDID:
+                    dead[mfdid] = a
+                elif op == MOP_CREATE:
+                    dead.pop(mfdid, None)
+                if seq <= ns_seq:
+                    stats.meta_skipped += 1
+                else:
+                    _replay_meta(entries, tier, open_backend, files)
+                    stats.meta_ops += 1
+                    if tier is not None:
+                        tier.ns_seq = seq      # the backend now reflects it
+                done_groups = gi + 1
+                continue
             path = log.fd_table_get(entries[0].fdid)
             if path is None:
                 continue  # orphan group: its file slot was already retired
+            if dead.get(entries[0].fdid) == path:
+                # fdid unlinked at a lower seq and not re-bound since (a
+                # different live binding would show a different slot path)
+                stats.unlinked_dropped += 1
+                done_groups = gi + 1
+                continue
             f = files.get(path)
             if f is None:
                 f = open_backend(path)
@@ -135,6 +219,51 @@ def recover(nvmm: NVMM, policy: Policy,
     # (reached only on success; the reformat also clears the route record)
     NVLog(nvmm, policy, format=True)
     return stats
+
+
+def _replay_meta(entries: List[Entry], tier, open_backend,
+                 files: Dict[str, object]) -> None:
+    """Apply one namespace record to the backend (idempotently — the op may
+    already have been applied pre-crash, or by a failed earlier recover()
+    attempt).  ``files`` is the replay's open-handle cache: unlink/rename
+    must invalidate (or re-key) its entries, or later data groups for a
+    re-created path would write through a handle the tier no longer owns."""
+    op, _fdid, aux, a, b = decode_meta(
+        b"".join(bytes(e.data) for e in entries))
+    if op == MOP_CREATE:
+        open_backend(a).close()       # ensure the path exists
+    elif op == MOP_FTRUNCATE:
+        f = files.get(a)
+        if f is None:
+            f = files[a] = open_backend(a)
+        f.truncate(aux)
+    elif op == MOP_UNLINK:
+        if tier is None:
+            raise RuntimeError("unlink record needs a tier-like backend "
+                               "(pass the tier to recover())")
+        h = files.pop(a, None)
+        if h is not None:
+            h.close()
+        tier.unlink(a)                # idempotent: a no-op when already gone
+    elif op == MOP_RENAME:
+        if tier is None:
+            raise RuntimeError("rename record needs a tier-like backend "
+                               "(pass the tier to recover())")
+        hb = files.pop(b, None)
+        if hb is not None:
+            hb.close()                # destination is replaced
+        ha = files.pop(a, None)
+        if tier.exists(a):
+            tier.rename(a, b)
+            if ha is not None:
+                files[b] = ha         # same backend object, re-keyed
+        else:
+            if ha is not None:
+                ha.close()
+            if not tier.exists(b):    # both lost: restore the destination
+                open_backend(b).close()
+    else:
+        raise ValueError(f"unknown namespace op {op}")
 
 
 def _finish(files: Dict[str, object], last_group: Dict[str, int],

@@ -107,6 +107,21 @@ MIN_IMPROVEMENT = 0.05         # a move must lower the hot shard's load by
 #                                >= 5% (max(hot-n, cold+n) <= 0.95*hot) —
 #                                otherwise it merely relocates the hot spot
 #                                (and a noise key is not worth a barrier)
+BARRIER_HORIZON_EPOCHS = 32    # migration cost model: a move's drain
+#                                barrier stalls the frozen file until its
+#                                pending entries land — estimated as the
+#                                hot shard's queue depth scaled by the
+#                                key's share of the shard's load (the
+#                                barrier waits on the FILE's entries, not
+#                                the whole shard).  The move pays off if
+#                                the per-epoch load reduction, recouped
+#                                over this many epochs (~a second of
+#                                steady traffic — hysteresis already
+#                                stops churn), exceeds that one-time
+#                                cost; a key whose backlog (in entries ≈
+#                                bytes / entry_size) outweighs it is
+#                                skipped and counted in
+#                                ``stats_skipped_uneconomic``.
 
 
 class Migration:
@@ -155,6 +170,8 @@ class EpochRouter:
         self.stats_epochs = 0                  # rebalance ticks evaluated
         self.stats_installs = 0                # epochs actually installed
         self.stats_skew_ratio = 0.0            # last epoch's hot/cold ratio
+        self.stats_skipped_uneconomic = 0      # moves rejected by the cost
+        #                                        model (barrier > gain)
         epoch, table = load_route_record(nvmm, policy)
         self.epoch = epoch
         self.table = table
@@ -264,9 +281,12 @@ class EpochRouter:
                     break
                 # hottest key on the hot shard whose move meaningfully
                 # lowers the group's maximum (not merely relocates it),
-                # preferring the largest such key
+                # preferring the largest such key.  The cost model then
+                # vetoes moves whose drain barrier — flushing the hot
+                # shard's whole backlog before the epoch can flip — costs
+                # more entries than the move recoups over the horizon.
                 cap = (1.0 - MIN_IMPROVEMENT) * loads[hot]
-                best = None
+                best = best_any = None
                 for key, n in key_load.items():
                     if key_sid[key] != hot or n <= 0:
                         continue
@@ -274,9 +294,20 @@ class EpochRouter:
                             and cold != self.static_sid_of_key(key)):
                         continue               # would not fit the table
                     if max(loads[hot] - n, loads[cold] + n) <= cap:
+                        if best_any is None or n > key_load[best_any]:
+                            best_any = key
+                        gain = loads[hot] - max(loads[hot] - n,
+                                                loads[cold] + n)
+                        barrier_cost = queues[hot] * n / max(1.0, loads[hot])
+                        if barrier_cost > BARRIER_HORIZON_EPOCHS * gain:
+                            continue           # barrier outweighs the gain
                         if best is None or n > key_load[best]:
                             best = key
                 if best is None:
+                    if best_any is not None:
+                        # a move was justified by imbalance but vetoed by
+                        # the cost model: surface it, don't pay the barrier
+                        self.stats_skipped_uneconomic += 1
                     break
                 if best not in self.table \
                         and cold != self.static_sid_of_key(best):

@@ -19,6 +19,13 @@ class FS(Protocol):
     def fsync(self, fd: int) -> None: ...
     def close(self, fd: int) -> None: ...
     def size(self, fd: int) -> int: ...
+    # namespace surface (the metadata half of the plug-and-play boundary —
+    # what SQLite's journal unlink / WAL reset and RocksDB's MANIFEST
+    # rename-into-place actually call):
+    def exists(self, path: str) -> bool: ...
+    def unlink(self, path: str) -> None: ...
+    def rename(self, old: str, new: str) -> None: ...
+    def ftruncate(self, fd: int, length: int) -> None: ...
 
 
 class NVCacheFS:
@@ -52,6 +59,23 @@ class NVCacheFS:
 
     def size(self, fd):
         return self.nv.stat_size(fd)
+
+    # namespace ops: journaled in the NVMM log (core/namespace.py), so a
+    # rename/unlink the app observed is crash-durable — unlike the raw
+    # TierFS below, where only what reached the device survives
+    def exists(self, path):
+        if self.nv.ns.lookup(path) is not None:
+            return True
+        return self.nv.tier.exists(path)
+
+    def unlink(self, path):
+        self.nv.unlink(path)
+
+    def rename(self, old, new):
+        self.nv.rename(old, new)
+
+    def ftruncate(self, fd, length):
+        self.nv.ftruncate(fd, length)
 
 
 class TierFS:
@@ -104,3 +128,15 @@ class TierFS:
 
     def size(self, fd):
         return self._fds[fd].size()
+
+    def exists(self, path):
+        return self.tier.exists(path)
+
+    def unlink(self, path):
+        self.tier.unlink(path)
+
+    def rename(self, old, new):
+        self.tier.rename(old, new)
+
+    def ftruncate(self, fd, length):
+        self._fds[fd].truncate(length)

@@ -40,7 +40,16 @@ class KVLite:
             if len(hdr) < _REC.size:
                 break
             klen, vlen = _REC.unpack(hdr)
+            if off + _REC.size + klen + vlen > self._end:
+                # torn tail record: a crash mid-append left a header whose
+                # key/value extend past EOF.  Stop at the last complete
+                # record — indexing the truncated tail would hand out reads
+                # of bytes that were never written (and the next put must
+                # overwrite the torn bytes, not append after them).
+                break
             key = self.fs.pread(self.fd, klen, off + _REC.size)
+            if len(key) < klen:
+                break
             self._index[bytes(key)] = (off + _REC.size + klen, vlen)
             off += _REC.size + klen + vlen
         self._end = off

@@ -241,13 +241,20 @@ class TierFile:
 
     def truncate(self, n: int) -> None:
         with self._lock:
-            del self._data[n:]
-            # drop page-cache/dirty state beyond the new size: a later fsync
-            # must not pay device cost for pages that no longer exist (the
-            # page holding byte n-1 survives — it may still be dirty)
-            last = (n + PAGE - 1) // PAGE      # first wholly-truncated page
-            self._dirty_pages = {p for p in self._dirty_pages if p < last}
-            self._cached_pages = {p for p in self._cached_pages if p < last}
+            if n < len(self._data):
+                del self._data[n:]
+                # drop page-cache/dirty state beyond the new size: a later
+                # fsync must not pay device cost for pages that no longer
+                # exist (the page holding byte n-1 survives — it may still
+                # be dirty)
+                last = (n + PAGE - 1) // PAGE  # first wholly-truncated page
+                self._dirty_pages = {p for p in self._dirty_pages if p < last}
+                self._cached_pages = {p for p in self._cached_pages if p < last}
+            elif n > len(self._data):
+                # ftruncate growth: sparse zero extension (no dirty pages —
+                # the kernel materializes holes lazily)
+                self._data.extend(b"\x00" * (n - len(self._data)))
+        self.gate.charge(self.device.syscall_s)
 
     def close(self) -> None:
         pass
@@ -268,6 +275,11 @@ class Tier:
         self.gate = CostGate(scale)
         self._files: Dict[str, TierFile] = {}
         self._lock = threading.Lock()
+        self.ns_seq = 0     # applied-watermark of the durable namespace
+        #                     (repro.core.namespace): the seq of the last
+        #                     metadata op reflected in this tier's dict —
+        #                     set by the owner as part of applying, read by
+        #                     recovery to replay exactly the ops above it
 
     def open(self, path: str) -> TierFile:
         with self._lock:
@@ -295,6 +307,20 @@ class Tier:
     def unlink(self, path: str) -> None:
         with self._lock:
             self._files.pop(path, None)
+        self.gate.charge(self.device.syscall_s)
+
+    def rename(self, old: str, new: str) -> None:
+        """Atomic rename-into-place (the install primitive of the legacy
+        metadata protocols): an existing ``new`` is replaced.  The moved
+        :class:`TierFile` handle stays valid — I/O through it is
+        path-independent, like an open fd across a rename."""
+        with self._lock:
+            f = self._files.pop(old, None)
+            if f is None:
+                raise FileNotFoundError(old)
+            self._files[new] = f
+            f.path = new
+        self.gate.charge(self.device.syscall_s)
 
     def paths(self):
         return list(self._files)

@@ -30,6 +30,10 @@ def make_nv(**kw):
     defaults.update(kw)
     pol = Policy(**defaults)
     tier = Tier(DRAM)
+    tier.open("/f")
+    tier.open("/g")    # pre-exist the test paths: open() then journals no
+    #                    create record, keeping the hand-stepped batch
+    #                    arithmetic below exactly as authored
     nv = NVCache(pol, tier, track_crashes=True)
     # the detached drain thread below is stepped by hand; stop the pool's
     # own threads so batch boundaries are exactly the test's step() calls

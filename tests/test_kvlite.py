@@ -40,3 +40,47 @@ def test_replay_on_reopen():
     db2 = KVLite(TierFS(tier), "/db", sync=True)
     assert db2.get(b"a") == b"3"
     assert db2.get(b"b") == b"2"
+
+
+def test_replay_stops_at_torn_tail_record():
+    """A crash mid-append can leave a header whose klen/vlen extend past
+    EOF; replay must stop at the last complete record instead of indexing
+    garbage (failing before the PR-5 fix: the torn key was indexed with a
+    value range past EOF, and the next put appended after the torn bytes)."""
+    import struct
+    tier = Tier(DRAM)
+    fs = TierFS(tier)
+    db = KVLite(fs, "/db", sync=True)
+    db.put(b"whole", b"value-1")
+    db.put(b"also", b"value-2")
+    good_end = db._end
+    db.close()
+    # simulate the torn append: a header claiming bytes far past EOF, plus
+    # a prefix of the key that never finished
+    torn = struct.pack("<II", 9, 1 << 20) + b"torn-"
+    raw = tier.open("/db")
+    raw.pwrite(torn, good_end)
+    db2 = KVLite(TierFS(tier), "/db", sync=True)
+    assert db2.get(b"whole") == b"value-1"
+    assert db2.get(b"also") == b"value-2"
+    assert len(db2) == 2, "torn tail record was indexed"
+    assert db2._end == good_end, "replay ran past the last complete record"
+    # the next put overwrites the torn bytes and is readable after reopen
+    db2.put(b"fresh", b"value-3")
+    db3 = KVLite(TierFS(tier), "/db", sync=True)
+    assert db3.get(b"fresh") == b"value-3"
+    assert len(db3) == 3
+
+
+def test_replay_stops_at_torn_header():
+    """EOF in the middle of a header (not just the payload) is also a torn
+    tail: replay must treat it as end-of-log."""
+    tier = Tier(DRAM)
+    db = KVLite(TierFS(tier), "/db", sync=True)
+    db.put(b"k", b"v")
+    good_end = db._end
+    db.close()
+    tier.open("/db").pwrite(b"\x05\x00", good_end)   # 2 bytes of a header
+    db2 = KVLite(TierFS(tier), "/db", sync=True)
+    assert db2.get(b"k") == b"v"
+    assert len(db2) == 1 and db2._end == good_end

@@ -1,0 +1,498 @@
+"""Durable namespace subsystem (PR 5 tentpole): logged metadata ops with
+crash-consistent create/rename/unlink/ftruncate.
+
+Covers the three layers of the protocol:
+
+* API semantics — rename replaces, unlink removes, ftruncate cuts/grows,
+  EBUSY on open files, ENOENT without O_CREAT, and the read path stays
+  full-scan-free throughout;
+* drain coordination — metadata entries are consumed (the log empties)
+  only after their backend effect is applied, and the batch-spanning
+  carry never holds one back;
+* crash consistency — a fuse wired into the NVMM kills the run at EVERY
+  persistence-protocol point of a metadata op sequence; after recovery
+  the namespace must be *old-or-new, never torn*: unlinked files never
+  resurrect, renamed data is attributed to exactly one name, a lost
+  kernel create is restored from the log.
+"""
+import os
+import threading
+
+import pytest
+
+from repro.core import NVCache, Policy, recover
+from repro.storage.tiers import DRAM, Tier
+from test_sharded_recovery import FusedNVMM, PowerLoss
+
+
+class ThreadFusedNVMM(FusedNVMM):
+    """Fuse that ticks (and blows) only on the constructing thread: the
+    app-visible crash point is deterministic, while the drain threads —
+    whose progress at that instant is inherently racy — keep running until
+    the crash itself, exactly like real power loss."""
+
+    def __init__(self, size, *, track=False):
+        super().__init__(size, track=track)
+        self._owner = threading.get_ident()
+
+    def _tick(self):
+        if threading.get_ident() != self._owner:
+            return
+        super()._tick()
+
+POL = Policy(entry_size=256, log_entries=128, page_size=256,
+             read_cache_pages=8, batch_min=4, batch_max=16)
+POL_NODRAIN = Policy(entry_size=256, log_entries=128, page_size=256,
+                     read_cache_pages=8, batch_min=10 ** 6, batch_max=10 ** 6)
+
+
+def clone_tier(tier, *, drop=(), ns_seq=None):
+    """The backend state an instant after the crash.  ``drop`` + ``ns_seq``
+    simulate a kernel that lost a *suffix* of namespace updates (files
+    created/renamed after the last directory sync): the dropped files
+    disappear and the applied watermark rolls back with them — recovery
+    must then rebuild exactly that suffix from the NVMM log."""
+    t2 = Tier(DRAM)
+    for p in tier.paths():
+        if p in drop:
+            continue
+        snap = tier.open(p).snapshot()
+        f2 = t2.open(p)
+        if snap:
+            f2.pwrite(snap, 0)
+    t2.ns_seq = tier.ns_seq if ns_seq is None else ns_seq
+    return t2
+
+
+# ------------------------------------------------------------- API semantics
+def test_rename_moves_data_and_replaces_destination():
+    tier = Tier(DRAM)
+    nv = NVCache(POL, tier)
+    fd = nv.open("/a")
+    nv.pwrite(fd, b"payload-a", 0)
+    nv.close(fd)
+    fd = nv.open("/b")
+    nv.pwrite(fd, b"old-b", 0)
+    nv.close(fd)
+    nv.rename("/a", "/b")
+    assert not tier.exists("/a")
+    fd = nv.open("/b", os.O_RDONLY)
+    assert nv.pread(fd, 16, 0) == b"payload-a"
+    nv.close(fd)
+    with pytest.raises(FileNotFoundError):
+        nv.stat_size("/a")
+    nv.shutdown()
+
+
+def test_unlink_removes_and_reopen_starts_fresh():
+    tier = Tier(DRAM)
+    nv = NVCache(POL, tier)
+    fd = nv.open("/f")
+    nv.pwrite(fd, b"\xAA" * 600, 0)
+    nv.close(fd)
+    nv.unlink("/f")
+    assert not tier.exists("/f")
+    with pytest.raises(FileNotFoundError):
+        nv.unlink("/f")
+    fd = nv.open("/f")                       # re-create
+    assert nv.stat_size(fd) == 0
+    assert nv.pread(fd, 600, 0) == b""
+    nv.pwrite(fd, b"new", 0)
+    nv.flush()
+    assert tier.open("/f").snapshot() == b"new"
+    nv.shutdown()
+
+
+def test_rename_refuses_open_files_unlink_goes_anonymous():
+    tier = Tier(DRAM)
+    nv = NVCache(POL, tier)
+    fd = nv.open("/f")
+    nv.open("/g")
+    nv.open("/x2")
+    with pytest.raises(OSError, match="EBUSY"):
+        nv.rename("/f", "/x")
+    with pytest.raises(OSError, match="EBUSY"):
+        nv.rename("/x2", "/g")               # busy destination
+    # POSIX unlink-while-open: the NAME goes now, the file stays usable
+    # through the open fd until its last close
+    nv.pwrite(fd, b"still-mine", 0)
+    nv.unlink("/f")
+    assert not tier.exists("/f")
+    with pytest.raises(FileNotFoundError):
+        nv.stat_size("/f")
+    assert nv.pread(fd, 10, 0) == b"still-mine"   # fd still works
+    nv.pwrite(fd, b"!", 10)
+    assert nv.pread(fd, 11, 0) == b"still-mine!"
+    nv.close(fd)                             # last close reclaims it
+    nv.flush()
+    assert not tier.exists("/f")
+    # the fdid was reclaimed: re-creating the path starts fresh
+    fd2 = nv.open("/f")
+    assert nv.stat_size(fd2) == 0
+    nv.shutdown()
+
+
+def test_unlink_while_open_dies_on_crash():
+    """POSIX: an unlinked-but-open file is gone after a crash — including
+    its post-unlink writes (no resurrection under the dead name)."""
+    tier = Tier(DRAM)
+    nv = NVCache(POL_NODRAIN, tier, track_crashes=True)
+    fd = nv.open("/hot-journal")
+    nv.pwrite(fd, b"j" * 400, 0)
+    nv.unlink("/hot-journal")
+    nv.pwrite(fd, b"after-unlink", 0)        # still-open fd keeps writing
+    nvmm = nv.crash()
+    tier2 = clone_tier(tier)
+    stats = recover(nvmm, POL_NODRAIN, tier2)
+    assert not tier2.exists("/hot-journal"), "unlinked file resurrected"
+    assert stats.entries_replayed == 0, "orphan entries reached a backend"
+
+
+def test_open_without_ocreat_raises_enoent():
+    tier = Tier(DRAM)
+    nv = NVCache(POL, tier)
+    with pytest.raises(FileNotFoundError):
+        nv.open("/missing", os.O_RDONLY)
+    with pytest.raises(FileNotFoundError):
+        nv.open("/missing", os.O_RDWR)
+    assert not tier.exists("/missing"), "failed open created a phantom"
+    nv.shutdown()
+
+
+def test_ftruncate_shrinks_purges_and_grows():
+    tier = Tier(DRAM)
+    nv = NVCache(POL, tier)
+    fd = nv.open("/f")
+    nv.pwrite(fd, bytes(range(1, 255)) * 3, 0)        # 762 bytes, 3 pages
+    assert nv.pread(fd, 762, 0) == bytes(range(1, 255)) * 3   # cache pages
+    nv.ftruncate(fd, 300)
+    assert nv.stat_size(fd) == 300
+    assert nv.pread(fd, 1000, 0) == (bytes(range(1, 255)) * 3)[:300]
+    # grow: zero-filled hole, cut bytes must NOT reappear
+    nv.ftruncate(fd, 700)
+    assert nv.stat_size(fd) == 700
+    got = nv.pread(fd, 1000, 0)
+    assert got[:300] == (bytes(range(1, 255)) * 3)[:300]
+    assert not any(got[300:]), "cut bytes resurrected after grow"
+    nv.flush()
+    snap = tier.open("/f").snapshot()
+    assert snap[:300] == (bytes(range(1, 255)) * 3)[:300]
+    assert not any(snap[300:])
+    assert nv.log.stats_full_scans == 0
+    nv.shutdown()
+
+
+def test_ftruncate_readonly_and_negative():
+    nv = NVCache(POL, Tier(DRAM))
+    fd = nv.open("/f")
+    nv.pwrite(fd, b"x", 0)
+    nv.close(fd)
+    ro = nv.open("/f", os.O_RDONLY)
+    with pytest.raises(OSError):
+        nv.ftruncate(ro, 0)
+    rw = nv.open("/f")
+    with pytest.raises(OSError):
+        nv.ftruncate(rw, -1)
+    nv.shutdown()
+
+
+def test_rename_same_name_and_missing_source():
+    tier = Tier(DRAM)
+    nv = NVCache(POL, tier)
+    with pytest.raises(FileNotFoundError):
+        nv.rename("/nope", "/x")
+    fd = nv.open("/a")
+    nv.close(fd)
+    nv.rename("/a", "/a")                    # no-op, must not deadlock
+    assert tier.exists("/a")
+    nv.shutdown()
+
+
+# --------------------------------------------------------- drain coordination
+def test_meta_entries_drain_and_log_empties():
+    tier = Tier(DRAM)
+    nv = NVCache(POL, tier)
+    for i in range(6):
+        fd = nv.open(f"/f{i}")
+        nv.pwrite(fd, b"d" * 100, 0)
+        nv.close(fd)
+    nv.rename("/f0", "/g0")
+    nv.unlink("/f1")
+    fd = nv.open("/f2")
+    nv.ftruncate(fd, 10)
+    nv.close(fd)
+    nv.flush()
+    assert nv.log.used_entries == 0, "metadata entries were not consumed"
+    s = nv.stats()
+    assert s["meta_ops"]["create"] == 6
+    assert s["meta_ops"]["rename"] == 1
+    assert s["meta_ops"]["unlink"] == 1
+    assert s["meta_ops"]["ftruncate"] == 1
+    nv.shutdown()
+
+
+def test_unlink_after_undrained_writes_never_resurrects():
+    """Undrained data + unlink: the barrier inside unlink drains first, so
+    neither the drain nor crash recovery can bring the bytes back."""
+    tier = Tier(DRAM)
+    nv = NVCache(POL_NODRAIN, tier, track_crashes=True)
+    fd = nv.open("/f")
+    nv.pwrite(fd, b"\xBB" * 700, 0)
+    nv.close(fd)
+    assert tier.open("/f").snapshot()[:700] == b"\xBB" * 700  # close drained
+    nv.unlink("/f")
+    assert not tier.exists("/f")
+    nvmm = nv.crash()
+    tier2 = clone_tier(tier)
+    recover(nvmm, POL_NODRAIN, tier2)
+    assert not tier2.exists("/f"), "recovery resurrected an unlinked file"
+
+
+def test_lost_create_is_restored_from_the_log():
+    """The load-bearing case for journaled creates: the kernel loses the
+    directory entry of a just-created (never-fsynced) file; recovery must
+    restore it from the metadata record — with its data."""
+    tier = Tier(DRAM)
+    nv = NVCache(POL_NODRAIN, tier, track_crashes=True)
+    fd = nv.open("/new-empty")
+    nv.close(fd)
+    fd = nv.open("/new-data")
+    nv.pwrite(fd, b"must-survive", 0)
+    nvmm = nv.crash()
+    # the kernel lost both creates: files gone, watermark rolled back
+    tier2 = clone_tier(tier, drop={"/new-empty", "/new-data"}, ns_seq=0)
+    recover(nvmm, POL_NODRAIN, tier2)
+    assert tier2.exists("/new-empty"), "lost create not replayed"
+    assert tier2.open("/new-data").snapshot()[:12] == b"must-survive"
+
+
+def test_recovery_attributes_renamed_data_to_one_name_only():
+    tier = Tier(DRAM)
+    nv = NVCache(POL_NODRAIN, tier, track_crashes=True)
+    fd = nv.open("/a")
+    nv.pwrite(fd, b"A" * 300, 0)
+    nv.close(fd)
+    pre_rename_seq = tier.ns_seq             # watermark before the rename
+    nv.rename("/a", "/b")
+    fd = nv.open("/b")
+    nv.pwrite(fd, b"Z", 0)                   # post-rename write, undrained
+    nvmm = nv.crash()
+    import copy
+    nvmm2 = copy.deepcopy(nvmm)              # recover() reformats the log
+    # adversarial: the kernel lost the rename (directory never synced) —
+    # the old name survives, the new one is gone, the watermark rolled
+    # back.  Recovery must rebuild the rename from the log.
+    tier2 = clone_tier(tier, drop={"/b"}, ns_seq=pre_rename_seq)
+    tier2.open("/a").pwrite(b"A" * 300, 0)   # pre-rename directory state
+    recover(nvmm, POL_NODRAIN, tier2)
+    assert not tier2.exists("/a"), "data attributed to the old name"
+    snap = tier2.open("/b").snapshot()
+    assert snap[:1] == b"Z" and snap[1:300] == b"A" * 299
+    # the surviving-kernel-state variant: nothing lost, same outcome
+    tier3 = clone_tier(tier)
+    recover(nvmm2, POL_NODRAIN, tier3)
+    assert not tier3.exists("/a")
+    snap = tier3.open("/b").snapshot()
+    assert snap[:1] == b"Z" and snap[1:300] == b"A" * 299
+
+
+# --------------------------------------------------- every-fuse-point crashes
+def _meta_script(nv):
+    """A metadata-heavy op sequence; yields (event, state) checkpoints.
+
+    Returns the list of *acknowledged* logical states, each a dict
+    path -> bytes of the expected durable image."""
+    states = []
+    fd = nv.open("/j")                       # create
+    nv.pwrite(fd, b"J" * 300, 0)
+    nv.close(fd)
+    states.append({"/j": b"J" * 300})
+    nv.rename("/j", "/k")                    # rename over nothing
+    states.append({"/k": b"J" * 300})
+    fd = nv.open("/j")                       # re-create old name
+    nv.pwrite(fd, b"2" * 100, 0)
+    nv.close(fd)
+    states.append({"/k": b"J" * 300, "/j": b"2" * 100})
+    fd = nv.open("/k")
+    nv.ftruncate(fd, 50)                     # cut
+    nv.close(fd)
+    states.append({"/k": b"J" * 50, "/j": b"2" * 100})
+    nv.rename("/j", "/k")                    # rename over existing
+    states.append({"/k": b"2" * 100})
+    nv.unlink("/k")                          # unlink
+    states.append({})
+    return states
+
+
+def _count_script_ops(pol):
+    dry = ThreadFusedNVMM(pol.nvmm_bytes)
+    nv = NVCache(pol, Tier(DRAM), nvmm=dry, recover=False)
+    dry.ops = 0
+    _meta_script(nv)
+    total = dry.ops
+    nv.cleanup.power_loss()
+    return total
+
+
+def _legal(observed, states):
+    for st in states:
+        ok = set(observed) == set(st)
+        if ok:
+            for p, want in st.items():
+                got = observed[p]
+                if not (got[:len(want)] == want and not any(got[len(want):])):
+                    ok = False
+                    break
+        if ok:
+            return True
+    return False
+
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_every_fuse_point_leaves_namespace_old_or_new(k):
+    """Crash at EVERY NVMM persistence-protocol point of the metadata
+    script: recovery must observe one of the acknowledged states (the
+    in-flight op applied whole or not at all) — never a torn namespace."""
+    pol = Policy(entry_size=256, log_entries=128 * k, page_size=256,
+                 read_cache_pages=8, batch_min=10 ** 6, batch_max=10 ** 6,
+                 shards=k, shard_route="fdid")
+    total = _count_script_ops(pol)
+    checked = 0
+    for fuse in range(0, total + 1, 3):      # every 3rd point: full protocol
+        #                                      coverage at tolerable runtime
+        nvmm = ThreadFusedNVMM(pol.nvmm_bytes, track=True)
+        tier = Tier(DRAM)
+        nv = NVCache(pol, tier, nvmm=nvmm, recover=False, track_crashes=True)
+        nvmm.arm(fuse)
+        states = None
+        try:
+            states = _meta_script(nv)
+        except PowerLoss:
+            pass
+        nvmm._fuse = None
+        nv._crashed = True
+        nv.cleanup.power_loss()
+        nvmm.crash()                         # nothing un-flushed survives
+        tier2 = clone_tier(tier)
+        recover(nvmm, pol, tier2)
+        observed = {p: tier2.open(p).snapshot() for p in tier2.paths()}
+        # legal = any prefix state: ops are acknowledged one at a time, and
+        # the crash may sit before or after the in-flight op's commit point
+        all_states = [{}]
+        full = _meta_script_states()
+        all_states.extend(full)
+        assert _legal(observed, all_states), \
+            (f"k={k} fuse={fuse}: torn namespace {observed!r}")
+        if states is not None:
+            # script completed: the final state must be the observed one
+            assert _legal(observed, [full[-1]])
+        checked += 1
+    assert checked > 10
+
+
+def _meta_script_states():
+    """Every state an op boundary can leave behind — each create/pwrite/
+    rename/ftruncate/unlink is individually atomic and synchronously
+    durable, so the crash may sit between ANY two of them (a created-but-
+    not-yet-written file is legally empty)."""
+    return [
+        {"/j": b""},                              # created
+        {"/j": b"J" * 300},                       # written
+        {"/k": b"J" * 300},                       # renamed
+        {"/k": b"J" * 300, "/j": b""},            # old name re-created
+        {"/k": b"J" * 300, "/j": b"2" * 100},
+        {"/k": b"J" * 50, "/j": b"2" * 100},      # ftruncate 50
+        {"/k": b"2" * 100},                       # rename over existing
+        {},                                       # unlinked
+    ]
+
+
+def test_fuse_mid_meta_commit_is_old_or_new_dense():
+    """Dense (every single fuse point) sweep over a short rename+unlink
+    script, K=2: the commit flag of the metadata group is the atomic
+    switch."""
+    pol = Policy(entry_size=256, log_entries=256, page_size=256,
+                 read_cache_pages=8, batch_min=10 ** 6, batch_max=10 ** 6,
+                 shards=2, shard_route="fdid")
+
+    def script(nv):
+        fd = nv.open("/m")
+        nv.pwrite(fd, b"M" * 100, 0)
+        nv.close(fd)
+        nv.rename("/m", "/n")
+        nv.unlink("/n")
+
+    dry = ThreadFusedNVMM(pol.nvmm_bytes)
+    nv = NVCache(pol, Tier(DRAM), nvmm=dry, recover=False)
+    dry.ops = 0
+    script(nv)
+    total = dry.ops
+    nv.cleanup.power_loss()
+
+    legal = [{}, {"/m": b""}, {"/m": b"M" * 100}, {"/n": b"M" * 100}]
+    for fuse in range(total + 1):
+        nvmm = ThreadFusedNVMM(pol.nvmm_bytes, track=True)
+        tier = Tier(DRAM)
+        nv = NVCache(pol, tier, nvmm=nvmm, recover=False, track_crashes=True)
+        nvmm.arm(fuse)
+        try:
+            script(nv)
+        except PowerLoss:
+            pass
+        nvmm._fuse = None
+        nv._crashed = True
+        nv.cleanup.power_loss()
+        nvmm.crash()
+        tier2 = clone_tier(tier)
+        stats = recover(nvmm, pol, tier2)
+        observed = {p: tier2.open(p).snapshot() for p in tier2.paths()}
+        assert _legal(observed, legal), \
+            f"fuse={fuse}: torn namespace {observed!r} ({stats})"
+
+
+def test_write_racing_unlink_commit_cannot_resurrect_the_path():
+    """Crash in the window between the MOP_UNLINK record committing and
+    the fd-table slot clearing, with a writer racing the unlink: the
+    post-unlink data group must NOT re-create the dead path holding only
+    the racing write's bytes (recovery's dead-fdid barrier).  Reproduced
+    deterministically by journaling the unlink record without the
+    slot-clear (the crash lands exactly there)."""
+    from repro.core.log import MOP_UNLINK
+    tier = Tier(DRAM)
+    nv = NVCache(POL_NODRAIN, tier, track_crashes=True)
+    fd = nv.open("/f")
+    nv.pwrite(fd, b"pre" * 20, 0)
+    # the unlink record commits (durable), but the crash preempts both the
+    # fd-table clear and the backend apply...
+    marks, _seq = nv.ns.journal(MOP_UNLINK, nv._of(fd).file.fdid, 0, "/f")
+    nv.ns.mark_applied(marks)
+    # ...while a racing writer's group commits at a higher seq
+    nv.pwrite(fd, b"RACE", 0)
+    nvmm = nv.crash()
+    tier2 = clone_tier(tier)
+    stats = recover(nvmm, POL_NODRAIN, tier2)
+    assert not tier2.exists("/f"), \
+        "racing write resurrected the unlinked path"
+    assert stats.unlinked_dropped >= 1
+
+
+def test_fdid_reuse_after_unlink_is_not_dropped_by_the_barrier():
+    """The dead-fdid barrier must lift when the fdid is re-bound: data of
+    a file that legitimately reuses the unlinked file's fdid (same path,
+    via a journaled re-create) survives recovery even while the old unlink
+    record is still in the log."""
+    tier = Tier(DRAM)
+    nv = NVCache(POL_NODRAIN, tier, track_crashes=True)
+    fd = nv.open("/f")
+    nv.pwrite(fd, b"old", 0)
+    nv.close(fd)                            # drains: fdid reclaimable
+    nv.unlink("/f")                         # record stays in the log
+    fd2 = nv.open("/f")                     # re-create: reuses the fdid
+    assert nv._of(fd2).file.fdid == 0       # same (first) fdid slot
+    nv.pwrite(fd2, b"NEW", 0)
+    nvmm = nv.crash()
+    tier2 = clone_tier(tier)
+    stats = recover(nvmm, POL_NODRAIN, tier2)
+    assert tier2.exists("/f"), "re-created file lost"
+    assert tier2.open("/f").snapshot()[:3] == b"NEW"
+    assert stats.unlinked_dropped == 0

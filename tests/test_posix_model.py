@@ -230,3 +230,156 @@ def test_flock_unlock_flushes():
     nv.flock(fd, unlock=True)       # release: pending writes reach the tier
     assert tier.open("/f").snapshot()[:12] == b"locked-write"
     nv.shutdown()
+
+
+# ------------------------------------------------ namespace ops (PR 5)
+PATHS = ["/p0", "/p1", "/p2"]
+
+namespace_ops_st = st.lists(st.one_of(
+    st.tuples(st.just("pwrite"), st.integers(0, 2), st.integers(0, 500),
+              st.binary(min_size=1, max_size=200)),
+    st.tuples(st.just("pread"), st.integers(0, 2), st.integers(0, 600),
+              st.integers(1, 200)),
+    st.tuples(st.just("ftruncate"), st.integers(0, 2), st.integers(0, 450)),
+    st.tuples(st.just("rename"), st.integers(0, 2), st.integers(0, 2)),
+    st.tuples(st.just("unlink"), st.integers(0, 2)),
+    st.tuples(st.just("stat"), st.integers(0, 2)),
+    st.tuples(st.just("flush"),),
+), min_size=1, max_size=25)
+
+
+def _apply_namespace_ops(nv, ref, ops):
+    """Drive NVCache and the multi-path oracle (path -> bytearray) through
+    one op list; every access opens/closes so rename/unlink see refs==0."""
+    for op in ops:
+        kind = op[0]
+        if kind == "pwrite":
+            _, pi, off, data = op
+            path = PATHS[pi]
+            fd = nv.open(path)
+            nv.pwrite(fd, data, off)
+            nv.close(fd)
+            img = ref.setdefault(path, bytearray())
+            if off + len(data) > len(img):
+                img.extend(b"\x00" * (off + len(data) - len(img)))
+            img[off:off + len(data)] = data
+        elif kind == "pread":
+            _, pi, off, n = op
+            path = PATHS[pi]
+            if path not in ref:
+                continue
+            fd = nv.open(path)
+            want = bytes(ref[path][off:off + n])
+            assert nv.pread(fd, n, off) == want, op
+            nv.close(fd)
+        elif kind == "ftruncate":
+            _, pi, ln = op
+            path = PATHS[pi]
+            fd = nv.open(path)
+            nv.ftruncate(fd, ln)
+            nv.close(fd)
+            img = ref.setdefault(path, bytearray())
+            if ln <= len(img):
+                del img[ln:]
+            else:
+                img.extend(b"\x00" * (ln - len(img)))
+        elif kind == "rename":
+            _, si, di = op
+            src, dst = PATHS[si], PATHS[di]
+            if src not in ref:
+                try:
+                    nv.rename(src, dst)
+                    raise AssertionError(f"rename of missing {src} passed")
+                except FileNotFoundError:
+                    continue
+            nv.rename(src, dst)
+            if src != dst:
+                ref[dst] = ref.pop(src)
+        elif kind == "unlink":
+            _, pi = op
+            path = PATHS[pi]
+            if path not in ref:
+                try:
+                    nv.unlink(path)
+                    raise AssertionError(f"unlink of missing {path} passed")
+                except FileNotFoundError:
+                    continue
+            nv.unlink(path)
+            del ref[path]
+        elif kind == "stat":
+            _, pi = op
+            path = PATHS[pi]
+            if path in ref:
+                assert nv.stat_size(path) == len(ref[path]), op
+            else:
+                try:
+                    nv.stat_size(path)
+                    raise AssertionError(f"stat of missing {path} passed")
+                except FileNotFoundError:
+                    pass
+        elif kind == "flush":
+            nv.flush()
+
+
+@settings(max_examples=30, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ops=namespace_ops_st)
+def test_namespace_ops_match_posix_reference(ops):
+    """rename/unlink/ftruncate across three paths against a multi-path
+    oracle: contents, sizes, ENOENT behavior and the final durable image
+    must all match plain POSIX."""
+    tier = Tier(DRAM)
+    nv = NVCache(POL, tier)
+    ref = {}
+    try:
+        _apply_namespace_ops(nv, ref, ops)
+        nv.flush()
+        for path in PATHS:
+            if path in ref:
+                want = bytes(ref[path])
+                fd = nv.open(path)
+                assert nv.pread(fd, len(want) + 10, 0) == want
+                nv.close(fd)
+                snap = tier.open(path).snapshot()
+                assert snap[:len(want)] == want
+                assert not any(snap[len(want):]), "stale bytes past EOF"
+            else:
+                assert not tier.exists(path), f"{path} should not exist"
+    finally:
+        nv.shutdown()
+    assert nv.log.stats_full_scans == 0
+
+
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ops=namespace_ops_st, crash_seed=st.integers(0, 2 ** 30))
+def test_namespace_ops_crash_recovery(ops, crash_seed):
+    """Same op mix, then power loss with adversarial cacheline eviction:
+    after recovery every surviving path holds exactly the oracle bytes,
+    unlinked files never resurrect, renamed data lives under exactly the
+    new name."""
+    import random
+    from repro.core import recover
+    tier = Tier(DRAM)
+    nv = NVCache(POL, tier, track_crashes=True)
+    ref = {}
+    _apply_namespace_ops(nv, ref, ops)
+    rng = random.Random(crash_seed)
+    nvmm = nv.crash(choose_evicted=lambda lines: [
+        l for l in lines if rng.random() < 0.5])
+    tier2 = Tier(DRAM)
+    for path in tier.paths():
+        snap = tier.open(path).snapshot()
+        f2 = tier2.open(path)
+        if snap:
+            f2.pwrite(snap, 0)
+    tier2.ns_seq = tier.ns_seq
+    recover(nvmm, POL, tier2)
+    for path in PATHS:
+        if path in ref:
+            want = bytes(ref[path])
+            got = tier2.open(path).snapshot()
+            assert got[:len(want)] == want, f"{path}: lost acknowledged bytes"
+            assert not any(got[len(want):]), f"{path}: stale bytes past EOF"
+        else:
+            assert not tier2.exists(path), f"{path} resurrected by recovery"

@@ -16,8 +16,11 @@ from repro.storage.tiers import DRAM, PAGE, SSD_SATA, Tier
 
 
 def make_policy(**kw) -> Policy:
+    # readahead_ramp=False: these tests pin the PR-3 full-window arithmetic
+    # exactly; the ramp (PR 5) has its own tests below
     defaults = dict(entry_size=256, log_entries=256, page_size=256,
-                    read_cache_pages=64, batch_min=4, batch_max=16)
+                    read_cache_pages=64, batch_min=4, batch_max=16,
+                    readahead_ramp=False)
     defaults.update(kw)
     return Policy(**defaults)
 
@@ -108,7 +111,8 @@ def test_readahead_never_bypasses_dirty_index_replay():
     for p in range(8):                     # E live entries on every page
         for j in range(E):
             nv.pwrite(fd, bytes([16 * p + j + 1]) * 64, p * 256 + j * 64)
-    assert nv.log.used_entries == 8 * E    # nothing drained
+    assert nv.log.used_entries == 8 * E + 1   # nothing drained (+1: the
+    #                                           journaled create of "/f")
     # force every page out of the cache so the next reads are extent misses
     nv.lru.drop_all()
     scans0 = nv.log.stats_full_scans
@@ -294,3 +298,74 @@ def test_lru_overflow_converges_back_to_capacity():
 def test_policy_validation(bad):
     with pytest.raises(ValueError):
         make_policy(**bad)
+
+
+# ------------------------------------------------------- readahead ramp (PR 5)
+def _ramp_nv(np=64, cap=8):
+    pol = make_policy(readahead_pages=cap, read_cache_pages=128,
+                      readahead_ramp=True)
+    tier = Tier(DRAM)
+    tier.open("/f").pwrite(bytes(range(256)) * np, 0)
+    nv = NVCache(pol, tier)
+    return nv, tier, nv.open("/f")
+
+
+def test_ramp_grows_2_4_8_on_a_sequential_stream():
+    """Kernel-style window growth: the first sequential miss after a reset
+    loads 2 pages, the next 4, then 8 — the full window is only paid once
+    the stream has proven itself."""
+    nv, tier, fd = _ramp_nv()
+    f = nv._of(fd).file
+    loads = []                       # extent sizes, via the range helper
+    p = 0
+    nv.pread(fd, 256, 0)             # miss 0: probe (1 page)
+    assert f.ra_window == 1
+    for expect in (2, 4, 8, 8):
+        p = f.ra_next
+        e0, e1 = nv._extent_range(f, p)
+        assert e0 == p and e1 - e0 == expect, (p, e0, e1)
+        loads.append(e1 - e0)
+        f.ra_next = e1               # pretend the extent loaded
+    nv.shutdown()
+
+
+def test_ramp_resets_on_a_random_miss():
+    nv, tier, fd = _ramp_nv()
+    f = nv._of(fd).file
+    nv.pread(fd, 256, 0)                       # probe
+    p = f.ra_next
+    e0, e1 = nv._extent_range(f, p)            # ramp to 2
+    assert (e0, e1) == (p, p + 2)
+    assert f.ra_window == 2
+    e0, e1 = nv._extent_range(f, 40)           # random miss: reset
+    assert (e0, e1) == (40, 41)
+    assert f.ra_window == 1
+    e0, e1 = nv._extent_range(f, 41)           # sequential again: ramp anew
+    assert e1 - e0 == 2
+    nv.shutdown()
+
+
+def test_ramp_short_burst_pays_less_than_full_window():
+    """The satellite's point: a 4-page sequential burst must not load the
+    full 8-page window (ramp: 1 + 2 + catches the rest), while a long
+    stream converges to the same per-window cost as the static window."""
+    # short burst: 4 pages
+    nv, tier, fd = _ramp_nv(np=64)
+    tf = tier.open("/f")
+    tf.drop_page_cache()
+    base = tf.stats_page_reads
+    for p in range(4):
+        nv.pread(fd, 256, p * 256)
+    burst_pages = tf.stats_page_reads - base
+    assert burst_pages <= 5, f"short burst overpaid: {burst_pages} pages"
+    nv.shutdown()
+    # long stream: total loads close to the static-window count
+    nv, tier, fd = _ramp_nv(np=64)
+    tf = tier.open("/f")
+    tf.drop_page_cache()
+    for p in range(64):
+        assert nv.pread(fd, 256, p * 256) == bytes(range(256))
+    s = nv.stats()
+    assert s["log_full_scans"] == 0
+    assert tf.stats_preads <= 12, f"long stream lost batching: {tf.stats_preads}"
+    nv.shutdown()

@@ -166,6 +166,33 @@ def test_plan_skips_noise_keys():
     assert router.plan() == []
 
 
+def test_plan_cost_model_vetoes_moves_behind_a_deep_backlog():
+    """The migration cost model (PR 5): a justified move is skipped — and
+    counted in ``stats_skipped_uneconomic`` — when the hot shard's drain
+    backlog (what the migration's barrier must flush first) exceeds the
+    load reduction recouped over the horizon; the same skew migrates once
+    the backlog clears."""
+    from repro.core.router import BARRIER_HORIZON_EPOCHS
+    pol = make_policy()
+    nvmm = NVMM(pol.nvmm_bytes)
+    NVLog(nvmm, pol, format=True)
+    router = EpochRouter(nvmm, pol)
+    skew = {0: 40, 4: 40, 1: 1, 2: 1, 3: 1}
+    feed(router, skew)
+    # moving one 40-entry key gains 39 entries/epoch and the key owns half
+    # the hot shard's load, so its barrier waits on ~half the backlog: a
+    # backlog deeper than 2 * horizon * gain makes the move a net loss
+    deep = [2 * BARRIER_HORIZON_EPOCHS * 39 + 4, 0, 0, 0]
+    assert router.plan(queue_depths=deep) == []
+    assert router.stats_skipped_uneconomic == 1
+    assert router.table == {}                 # nothing installed
+    # backlog drained: the same skew now migrates
+    feed(router, skew)
+    plan = router.plan(queue_depths=[0, 0, 0, 0])
+    assert len(plan) == 1 and plan[0].old_sid == 0
+    assert router.stats_skipped_uneconomic == 1
+
+
 def test_plan_skips_moves_that_cannot_fit_the_table():
     """A migration whose install would be refused (table full) must not be
     planned at all — the freeze + drain barrier would be paid every epoch
