@@ -28,7 +28,8 @@ def policy(log_mib: float, *, entry=4096, batch_min=1000, batch_max=10000,
            read_pages=1024, shards=1, shard_route="stripe",
            drain_coalesce=True, fsync_epoch=True, readahead=8,
            span_batches=True, deadline_ms=5.0, rebalance=False,
-           rebalance_epoch_ms=50.0, placement_groups=1) -> Policy:
+           rebalance_epoch_ms=50.0, placement_groups=1,
+           page_frames=0, classify_window=32) -> Policy:
     return Policy(entry_size=entry, log_entries=max(8 * shards, int(log_mib * 1024 * 1024 // entry)),
                   page_size=4096, read_cache_pages=read_pages,
                   batch_min=batch_min, batch_max=batch_max, verify_crc=False,
@@ -39,7 +40,8 @@ def policy(log_mib: float, *, entry=4096, batch_min=1000, batch_max=10000,
                   coalesce_deadline_ms=deadline_ms,
                   shard_rebalance=rebalance,
                   rebalance_epoch_ms=rebalance_epoch_ms,
-                  placement_groups=placement_groups)
+                  placement_groups=placement_groups,
+                  page_frames=page_frames, classify_window=classify_window)
 
 
 @dataclasses.dataclass
@@ -64,7 +66,8 @@ def make_stack(name: str, *, log_mib: float = 64, batch_min=1000,
                readahead: int = 8, span_batches: bool = True,
                deadline_ms: float = 5.0, rebalance: bool = False,
                rebalance_epoch_ms: float = 50.0,
-               placement_groups: int = 1) -> Stack:
+               placement_groups: int = 1, page_frames: int = 0,
+               classify_window: int = 32) -> Stack:
     if name == "nvcache+ssd":
         tier = tiers.Tier(tiers.SSD_SATA, sync=False, scale=scale)
         nv = NVCache(policy(log_mib, batch_min=batch_min, batch_max=batch_max,
@@ -75,7 +78,9 @@ def make_stack(name: str, *, log_mib: float = 64, batch_min=1000,
                             span_batches=span_batches,
                             deadline_ms=deadline_ms, rebalance=rebalance,
                             rebalance_epoch_ms=rebalance_epoch_ms,
-                            placement_groups=placement_groups), tier)
+                            placement_groups=placement_groups,
+                            page_frames=page_frames,
+                            classify_window=classify_window), tier)
         return Stack(name, NVCacheFS(nv), nv, tier)
     if name == "nvcache+nova":
         tier = tiers.Tier(NOVA, sync=False, scale=scale)
@@ -87,7 +92,9 @@ def make_stack(name: str, *, log_mib: float = 64, batch_min=1000,
                             span_batches=span_batches,
                             deadline_ms=deadline_ms, rebalance=rebalance,
                             rebalance_epoch_ms=rebalance_epoch_ms,
-                            placement_groups=placement_groups), tier)
+                            placement_groups=placement_groups,
+                            page_frames=page_frames,
+                            classify_window=classify_window), tier)
         return Stack(name, NVCacheFS(nv), nv, tier)
     if name == "dm-writecache":
         tier = tiers.DMWriteCacheTier(scale=scale)

@@ -1,10 +1,16 @@
 """CI entry point: run the PR's headline benchmarks and emit ONE
-machine-readable JSON (``BENCH_pr5.json``) so the perf trajectory of the
+machine-readable JSON (``BENCH_pr7.json``) so the perf trajectory of the
 repo is diffable from PR 2 onward.
 
-    PYTHONPATH=src python benchmarks/run_all.py [--out BENCH_pr5.json] [--quick]
+    PYTHONPATH=src python benchmarks/run_all.py [--out BENCH_pr7.json] [--quick]
 
-Emitted metrics (schema ``bench_schema: 5``):
+Emitted metrics (schema ``bench_schema: 7``):
+
+* ``dualmode`` — the PR-7 adaptive logging-vs-paging engine: steady-state
+  persisted bytes (NVMM + backend) per committed byte on an
+  overwrite-heavy stream, paged vs log mode (acceptance >= 1.5x fewer),
+  plus the trickle-parity guard (classifier keeps small-write streams on
+  the log; within 5% of the PR-5 tip);
 
 * ``legacy`` — the §IV journal-mode legacy workloads over the durable
   namespace (PR 5): SQLite rollback-journal (per-txn journal fsync +
@@ -30,7 +36,7 @@ import sys
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import (fig3_dbbench, fig8_coalescing, fig9_readpath,  # noqa: E402
-                        fig10_skew)
+                        fig10_skew, fig_dualmode)
 
 
 def run(quick: bool = False) -> dict:
@@ -45,6 +51,10 @@ def run(quick: bool = False) -> dict:
     rows = fig8_coalescing.run_coalesce_compare(total_mib=total_mib)
     epoch = fig8_coalescing.run_fsync_epoch(total_mib=2 if quick else 4)
     dm = fig8_coalescing.run_dirty_miss(n_pages=64 if quick else 192)
+    dual = fig_dualmode.run_bytes_per_committed(
+        n_pages=16 if quick else 32, passes=4 if quick else 8)
+    dual_trickle = fig_dualmode.run_trickle_parity(
+        n_writes=64 if quick else 192)
 
     leg_by = {(r["model"], r["stack"]): r for r in legacy}
 
@@ -71,9 +81,27 @@ def run(quick: bool = False) -> dict:
     ropb8 = cold_by_ra[8]["read_ops_per_byte"]
     ppb_tip = trickle_by["pr2-tip"]["backend_page_writes_per_committed_byte"]
     ppb_span = trickle_by["span-batches"]["backend_page_writes_per_committed_byte"]
+    dual_by = {r["mode"]: r for r in dual}
+    dual_tr_by = {r["mode"]: r for r in dual_trickle}
+    bpc_log = dual_by["log"]["persisted_per_committed_byte"]
+    bpc_paged = dual_by["paged"]["persisted_per_committed_byte"]
     return {
-        "bench_schema": 5,
-        "pr": 5,
+        "bench_schema": 7,
+        "pr": 7,
+        "dualmode": {
+            "persisted_bytes_per_committed_byte_paged": bpc_paged,
+            "persisted_bytes_per_committed_byte_log": bpc_log,
+            "byte_reduction_x": bpc_log / max(1e-12, bpc_paged),
+            "mode_migrations": dual_by["paged"]["mode_migrations"],
+            "log_full_scans": dual_by["paged"]["log_full_scans"],
+            "trickle_us_per_write": dual_tr_by["dual-engine"]["us_per_write"],
+            "trickle_us_per_write_pr5_tip": dual_tr_by["pr5-tip"]["us_per_write"],
+            "trickle_overhead_pct": 100.0
+                * (dual_tr_by["dual-engine"]["us_per_write"]
+                   - dual_tr_by["pr5-tip"]["us_per_write"])
+                / max(1e-12, dual_tr_by["pr5-tip"]["us_per_write"]),
+            "detail": dual + dual_trickle,
+        },
         "legacy": {
             "sqlite_rollback_journal": _legacy_block("sqlite-rj"),
             "sqlite_wal": _legacy_block("sqlite-wal"),
@@ -134,7 +162,7 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-        "BENCH_pr5.json"))
+        "BENCH_pr7.json"))
     ap.add_argument("--quick", action="store_true",
                     help="smaller workload for CI smoke runs")
     args = ap.parse_args()
@@ -143,7 +171,12 @@ def main() -> None:
         json.dump(result, fh, indent=2, sort_keys=True)
         fh.write("\n")
     leg = result["legacy"]
-    print(f"wrote {args.out}: legacy workloads over the durable namespace — "
+    print(f"wrote {args.out}: dual persistence engine — paged mode persists "
+          f"{result['dualmode']['byte_reduction_x']:.2f}x fewer bytes per "
+          f"committed byte than the log on overwrite-heavy streams "
+          f"(trickle overhead "
+          f"{result['dualmode']['trickle_overhead_pct']:+.1f}%); "
+          f"legacy workloads over the durable namespace — "
           f"SQLite rollback-journal "
           f"{leg['sqlite_rollback_journal']['speedup_x_vs_ssd']:.1f}x, "
           f"SQLite WAL {leg['sqlite_wal']['speedup_x_vs_ssd']:.1f}x, "

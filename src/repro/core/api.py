@@ -33,7 +33,8 @@ from repro.core.log import (META_NO_FDID, MOP_CREATE, MOP_FTRUNCATE,
                             MOP_RENAME, MOP_UNLINK, NVLog)
 from repro.core.namespace import Namespace
 from repro.core.nvmm import NVMM
-from repro.core.policy import Policy
+from repro.core.pager import PagedRegion
+from repro.core.policy import Policy, StreamClassifier
 from repro.core.readcache import AtomicInt, LRUCache, RadixTree
 from repro.core.router import EpochRouter
 from repro.core import recovery as _recovery
@@ -49,7 +50,8 @@ class File:
     __slots__ = ("path", "fdid", "backend", "radix", "size", "size_lock",
                  "refs", "pending", "shards_touched", "_drained", "ra_next",
                  "ra_window", "hwm", "_route_cv", "route_inflight",
-                 "route_frozen", "unlinked")
+                 "route_frozen", "unlinked", "pmode", "clf", "frames",
+                 "skip_drain_fsync")
 
     def __init__(self, path: str, fdid: int, backend):
         self.path = path
@@ -74,6 +76,16 @@ class File:
         #   the name is gone but the file lives until its last close; its
         #   drain skips the backend fsync (the bytes die with the name on
         #   any crash) and close() skips the drain barrier
+        # dual persistence (VERSION 4): which mode this file's write stream
+        # is in, the per-stream classifier (None without a paged region),
+        # and the page_no -> frame index map of its NVMM-resident frames
+        # (mutated under the page's atomic_lock)
+        self.pmode = False                       # True == paged mode
+        self.clf: Optional[StreamClassifier] = None
+        self.frames: Dict[int, int] = {}
+        self.skip_drain_fsync = False            # ftruncate(0) WAL-reset
+        #   window: the barrier's drain skips the backend fsync for bytes
+        #   the journaled truncate will discard anyway
         # route-epoch gate (adaptive routing only): writers enter before the
         # route lookup and exit after the log append, so a migration can
         # freeze the file and know no in-flight write still holds a stale
@@ -175,14 +187,22 @@ class NVCache:
         if policy.shard_rebalance:
             self.router = EpochRouter(self.nvmm, policy)
             self.log.router = self.router
+        # dual persistence (VERSION 4): the paged region absorbing large /
+        # overwrite-heavy streams in place (see core/pager.py)
+        self.pager: Optional[PagedRegion] = None
+        if policy.page_frames:
+            self.pager = PagedRegion(self.nvmm, policy, self.log.next_seq)
         self.cleanup = CleanupPool(self.log, self._resolve_fdid,
                                    router=self.router,
                                    migrate=self._migrate_route
                                    if self.router is not None else None,
                                    meta_gate=self.ns,
-                                   reap=self._reap_file)
+                                   reap=self._reap_file,
+                                   pager=self.pager,
+                                   writeback=self._writeback_pressure)
         self.cleanup.start()
         self._crashed = False
+        self.stats_mode_migrations = 0
         self.stats_dirty_misses = 0
         self.stats_replay_entries = 0   # refs inspected across dirty misses
         self.stats_readahead_loads = 0  # extent loads that prefetched pages
@@ -213,7 +233,12 @@ class NVCache:
             raise RuntimeError("instance crashed")
 
     def shutdown(self) -> None:
-        """Graceful: drain the log, stop the cleanup thread."""
+        """Graceful: drain the log, write back dirty frames, stop the
+        cleanup threads."""
+        if self.pager is not None:
+            for f in list(self._by_fdid.values()):
+                if not f.unlinked:
+                    self._writeback_file_frames(f, free=False, do_fsync=True)
         self.cleanup.shutdown()
         self.check()
 
@@ -240,6 +265,12 @@ class NVCache:
                 raise TimeoutError("drain of namespace records timed out")
         finally:
             self.cleanup.end_drain()
+        if self.pager is not None:
+            # the paged half of the barrier: dirty frames reach the backend
+            # (frames stay mapped — they are a valid NVMM-resident cache)
+            for f in list(self._by_fdid.values()):
+                if not f.unlinked:
+                    self._writeback_file_frames(f, free=False, do_fsync=True)
         with self._meta:
             # sweep files orphaned by a timed-out close barrier or an
             # unlink-while-open (refs 0, kept only so the drain could
@@ -254,6 +285,9 @@ class NVCache:
         self.check()
         accmode = flags & _ACCMODE
         with self._meta:
+            # a queued rename apply may still be in flight: the backend
+            # namespace must be current before exists()/open() consult it
+            self.ns.apply_deferred()
             f = self.ns.lookup(path)
             if f is None:
                 created = not self.tier.exists(path)
@@ -286,6 +320,8 @@ class NVCache:
                     if marks is not None:
                         self.ns.mark_applied(marks)
                 f = File(path, fdid, backend)
+                if self.pager is not None:
+                    f.clf = StreamClassifier(self.policy)
                 self.ns.bind(path, f)
             if accmode != O_RDONLY and f.radix is None:
                 f.radix = RadixTree()               # read cache only for writers
@@ -323,6 +359,21 @@ class NVCache:
     def _maybe_retire_locked(self, f: File) -> None:
         if f.refs != 0 or f.pending.get() > 0:
             return
+        if self.pager is not None and f.frames:
+            if f.unlinked:
+                # the bytes die with the name: durably invalidate without
+                # writeback, exactly like the fsync-free drain of unlinked
+                # log entries.  Freeing BEFORE the fdid is reused below is
+                # what stops a recovery from attributing the old frames to
+                # the slot's next occupant.
+                idxs = list(f.frames.values())
+                f.frames.clear()
+                self.pager.invalidate(idxs)
+            else:
+                # normally clean by now (close/flush wrote them back); a
+                # timed-out barrier can leave dirty frames, so flush
+                # defensively before the fdid slot is recycled
+                self._writeback_file_frames(f, free=True, do_fsync=True)
         if f.unlinked:
             # anonymous (name already removed at unlink time): only the
             # fdid binding remains, kept so the drain could resolve it
@@ -361,20 +412,54 @@ class NVCache:
             cur = f.size
         if cur == length and f.backend.size() == length:
             return                            # nothing to cut or extend
-        self._drain_barrier(f, "ftruncate")
-        # journal under _meta like every namespace op (the Namespace lock
-        # invariant): otherwise a concurrent unlink-while-open could slip
-        # between the f.unlinked check and the journal append, and recovery
-        # would replay the MOP_FTRUNCATE *after* the unlink — re-creating
-        # the dead path as a length-L file
-        with self._meta:
-            if f.unlinked:
-                # anonymous file: no name to journal under (and none
-                # needed — the file is gone after any crash)
-                marks = None
-            else:
-                marks, mseq = self.ns.journal(MOP_FTRUNCATE, f.fdid,
-                                              length, f.path)
+        # ftruncate(0) — the SQLite WAL reset — drains fsync-free: freeze
+        # the route gate (no new commits; in-flight writes finish), journal
+        # the truncate FIRST, and only then run the barrier with the
+        # per-file fsync skip set.  Safe for the same reason the unlinked
+        # drain is: every drained entry's seq is below the committed
+        # truncate record's, so after any crash recovery either replays
+        # entries-then-truncate or just the truncate — either way the
+        # discarded bytes never needed to reach the device.  A gate that
+        # cannot freeze (concurrent migration) falls back to the plain
+        # ordering below.
+        wal_reset = (length == 0 and not f.unlinked
+                     and f.route_freeze(timeout=60.0))
+        marks = None
+        try:
+            if wal_reset:
+                with self._meta:
+                    if f.unlinked:            # raced an unlink: plain path
+                        pass
+                    else:
+                        marks, mseq = self.ns.journal(MOP_FTRUNCATE, f.fdid,
+                                                      0, f.path)
+                f.skip_drain_fsync = True
+                try:
+                    self._drain_barrier(f, "ftruncate")
+                finally:
+                    f.skip_drain_fsync = False
+            if marks is None:
+                self._drain_barrier(f, "ftruncate")
+                # journal under _meta like every namespace op (the Namespace
+                # lock invariant): otherwise a concurrent unlink-while-open
+                # could slip between the f.unlinked check and the journal
+                # append, and recovery would replay the MOP_FTRUNCATE
+                # *after* the unlink — re-creating the dead path as a
+                # length-L file
+                with self._meta:
+                    if f.unlinked:
+                        # anonymous file: no name to journal under (and none
+                        # needed — the file is gone after any crash)
+                        marks = None
+                    else:
+                        marks, mseq = self.ns.journal(MOP_FTRUNCATE, f.fdid,
+                                                      length, f.path)
+            self._truncate_apply(f, length, marks, mseq if marks else 0)
+        finally:
+            if wal_reset:
+                f.route_unfreeze()
+
+    def _truncate_apply(self, f: File, length: int, marks, mseq: int) -> None:
         try:
             # order matters: size first (readers clamp against it, so no
             # new read can reach the cut bytes), then truncate the backend,
@@ -392,24 +477,41 @@ class NVCache:
             if f.radix is not None:
                 ps = self.policy.page_size
                 first_cut = -(-length // ps)      # first wholly-cut page
+                cut_frames = []
                 for d in f.radix.iter_descs():
                     if d.page_no < first_cut - 1:
                         continue                  # untouched by the cut
                     with d.atomic_lock, d.cleanup_lock:
-                        if d.page_no >= first_cut and d.content is not None:
-                            d.content.desc = None  # LRU reclaims it as free
-                            d.content = None
-                            d.prefetched = False
-                        elif d.content is not None and length % ps:
-                            # boundary page survives: zero its cut tail so
-                            # a later size-growing write reads zeros there
-                            d.content.data[length % ps:] = \
-                                bytes(ps - length % ps)
+                        fidx = f.frames.get(d.page_no)
+                        if d.page_no >= first_cut:
+                            if fidx is not None:
+                                # wholly-cut frame: drop without writeback —
+                                # the journaled truncate (higher seq) cuts
+                                # it on replay too, so old-or-new holds
+                                del f.frames[d.page_no]
+                                cut_frames.append(fidx)
+                            if d.content is not None:
+                                d.content.desc = None  # LRU frees it
+                                d.content = None
+                                d.prefetched = False
+                        elif length % ps:
+                            if fidx is not None:
+                                # boundary frame survives shorter: reseal
+                                # its header so reads/recovery clamp to the
+                                # new length (tail reads as zeros)
+                                self.pager.truncate_frame(fidx, length % ps)
+                            if d.content is not None:
+                                # boundary page survives: zero its cut tail
+                                # so a later size-growing write reads zeros
+                                d.content.data[length % ps:] = \
+                                    bytes(ps - length % ps)
                         # refs are NOT cleared here: the drain barrier above
                         # already retired every pre-truncate ref, so any ref
                         # present now belongs to a write committed *after*
                         # the barrier by a concurrent fd — clearing it would
                         # blind readers to an entry the drain will still land
+                if cut_frames:
+                    self.pager.invalidate(cut_frames)
             if marks is not None:
                 self.ns.note_backend_applied(mseq)
         finally:
@@ -452,11 +554,95 @@ class NVCache:
                 if self._by_fdid.get(mig.fdid) is not f:
                     return False    # retired (and possibly reused) mid-
                     #                 migration: same hazard as above
+                if mig.new_shift is not None:
+                    # stripe-width widening: re-route the whole file at a
+                    # narrower stripe instead of moving one key — the
+                    # barrier above makes the width change safe for the
+                    # same reason a key move is (no undrained entry spans
+                    # the old and new stripe maps)
+                    return self.router.install_width(mig.fdid, mig.new_shift)
                 return self.router.install(mig.key, mig.new_sid)
         except TimeoutError:
             return False
         finally:
             f.route_unfreeze()
+
+    # --------------------------------------------- dual-mode machinery
+    def _migrate_mode(self, f: File, to_paged: bool,
+                      timeout: float = 10.0) -> bool:
+        """Move a live file between persistence modes behind the shared
+        freeze/barrier protocol (the generalized ``_migrate_route``):
+        freeze the route gate (no new writes commit; in-flight ones
+        finish), drain the file's log entries, and — for page→log — write
+        its frames back and free them.  After the flip every page of the
+        file is cleanly owned by the new mode.  Returns False (no state
+        changed) when the freeze or barrier cannot complete."""
+        if self.pager is None or f.pmode == to_paged or f.unlinked:
+            return False
+        if not f.route_freeze(timeout=timeout):
+            return False
+        try:
+            self._drain_barrier(f, "mode-migration", timeout=timeout)
+            if not to_paged:
+                # leaving paged mode: frames flush to the backend and are
+                # freed so subsequent log-mode writes re-own the pages
+                self._writeback_file_frames(f, free=True, do_fsync=True)
+            f.pmode = to_paged
+            self.stats_mode_migrations += 1
+            return True
+        except TimeoutError:
+            return False
+        finally:
+            f.route_unfreeze()
+
+    def _writeback_file_frames(self, f: File, idxs=None, *, free: bool,
+                               do_fsync: bool) -> int:
+        """Flush (a subset of) a file's frames to the backend — the paged
+        twin of the drain's apply step, minus replay: the frame already IS
+        the coalesced page image.  ``free`` additionally unmaps and
+        durably invalidates the written frames (page→log migration,
+        retirement); it always pairs with ``do_fsync=True`` — freeing a
+        frame whose bytes only reached the device cache would open a
+        data-loss window no log entry ever has."""
+        if self.pager is None or not f.frames:
+            return 0
+        ps = self.policy.page_size
+        items = sorted((pn, ix) for pn, ix in f.frames.items()
+                       if idxs is None or ix in idxs)
+        wrote = []
+        for page_no, idx in items:
+            d = f.radix.get_or_create(page_no)
+            with d.atomic_lock:
+                if f.frames.get(page_no) != idx:
+                    continue                  # raced a truncate/retire
+                view, ln = self.pager.read(idx)
+                if ln:
+                    f.backend.pwrite(bytes(view), page_no * ps)
+                if free:
+                    del f.frames[page_no]
+                wrote.append(idx)
+        if wrote and do_fsync and not f.unlinked:
+            f.backend.fsync()
+        for idx in wrote:
+            self.pager.mark_clean(idx)
+        if free and wrote:
+            self.pager.invalidate(wrote)
+        return len(wrote)
+
+    def _writeback_pressure(self, max_frames: int = 32) -> int:
+        """Pool-pressure callback (the pager's writeback thread): flush the
+        oldest-dirty frames so allocation keeps finding clean capacity,
+        mirroring the drain's role for the log half."""
+        if self.pager is None:
+            return 0
+        total = 0
+        for fdid, idxs in self.pager.dirty_victims(max_frames).items():
+            f = self._by_fdid.get(fdid)
+            if f is None:
+                continue
+            total += self._writeback_file_frames(f, idxs, free=False,
+                                                 do_fsync=True)
+        return total
 
     def close(self, fd: int) -> None:
         """Flush this file's pending writes to the kernel, then close
@@ -471,6 +657,11 @@ class NVCache:
                 # barrier — its remaining entries drain (fsync-free) in
                 # the background and the reap retires the fdid
                 self._drain_barrier(f, "close")
+                if self.pager is not None and f.frames:
+                    # the paged half of flush-on-close: frames reach the
+                    # kernel too (they stay mapped as cache — the last
+                    # close retires them via _maybe_retire_locked)
+                    self._writeback_file_frames(f, free=False, do_fsync=True)
         finally:
             # teardown must run even when the drain barrier fails: the fd
             # was already popped, so skipping the refcount would leak the
@@ -518,13 +709,22 @@ class NVCache:
         pol = self.policy
         max_op = (pol.entries_per_shard - 1) * pol.entry_data
         split_stripes = pol.shards > 1 and pol.shard_route == "stripe"
-        # epoch versioning (adaptive routing only): the whole split runs
-        # under the file's route gate, so every chunk's route lookup sees
-        # ONE routing epoch and a migration cannot slip between lookup and
-        # log append (the stale-route race core/router.py rules out)
-        gated = self.router is not None
-        if gated:
-            f.route_enter()
+        # stream classification (dual persistence): feed the write to the
+        # per-file classifier BEFORE entering the route gate — a proposed
+        # mode switch runs the migration protocol, which freezes that very
+        # gate.  confirm() only after the migration actually lands, so a
+        # failed freeze (concurrent migration) re-proposes on later writes.
+        if f.clf is not None and not f.unlinked:
+            switch = f.clf.note_write(off, len(data))
+            if switch is not None and self._migrate_mode(f, switch == "page"):
+                f.clf.confirm(switch)
+        # the whole split runs under the file's route gate, so every
+        # chunk's route lookup sees ONE routing epoch and a migration
+        # cannot slip between lookup and log append (the stale-route race
+        # core/router.py rules out); mode migration and the ftruncate(0)
+        # WAL-reset freeze reuse the same gate, so it is held in every
+        # configuration, not just under adaptive routing
+        f.route_enter()
         try:
             written = 0
             view = memoryview(data)
@@ -534,7 +734,7 @@ class NVCache:
                     # ops never span a stripe: overlapping writes always
                     # route to the same shard, keeping per-location order a
                     # shard-local property (see core/log.py docstring)
-                    sb = pol.stripe_bytes
+                    sb = self._stripe_bytes_of(f)
                     lim = min(lim, sb - (off + written) % sb)
                 chunk = view[written:written + lim]
                 self._pwrite_op(f, bytes(chunk), off + written)
@@ -542,12 +742,20 @@ class NVCache:
                 if progress is not None:
                     progress[0] = written
         finally:
-            if gated:
-                f.route_exit()
+            f.route_exit()
         return len(data)
+
+    def _stripe_bytes_of(self, f: File) -> int:
+        """Effective stripe width for this file — narrowed by the router's
+        per-fdid width tuning when the file is persistently hot."""
+        if self.router is not None:
+            return self.router.stripe_bytes_of(f.fdid)
+        return self.policy.stripe_bytes
 
     def _pwrite_op(self, f: File, data: bytes, off: int) -> None:
         """One atomic write op == one committed entry group (Alg. 1)."""
+        if f.pmode and self.pager is not None:
+            return self._pwrite_paged(f, data, off)
         ps = self.policy.page_size
         n = len(data)
         p0, p1 = off // ps, (off + max(n, 1) - 1) // ps
@@ -588,6 +796,97 @@ class NVCache:
         finally:
             for d in reversed(descs):
                 d.atomic_lock.release()
+
+    # ------------------------------------------------- paged write path
+    def _pwrite_paged(self, f: File, data: bytes, off: int) -> None:
+        """One write op in paged mode: each touched page lands in its NVMM
+        frame **in place** (the ping-pong slot flip in core/pager.py is the
+        commit point) instead of appending a log entry — the whole point of
+        the mode: N overwrites of a page cost N page-stores, not N log
+        entries that each drain to the backend.
+
+        Per-page old-or-new (same guarantee the log gives per op group):
+        each page's flip is atomic, pages commit in ascending order under
+        their atomic locks.  A page that cannot get a frame — pool
+        exhausted, or the page still has undrained log refs (mode just
+        flipped and the barrier raced a concurrent fd) — falls back to a
+        per-page log append, preserving the ownership invariant: a (file,
+        page) is either framed or logged, never both."""
+        ps = self.policy.page_size
+        n = len(data)
+        p0, p1 = off // ps, (off + max(n, 1) - 1) // ps
+        descs = [f.radix.get_or_create(p) for p in range(p0, p1 + 1)]
+        for d in descs:                       # ascending page order: no deadlock
+            d.atomic_lock.acquire()
+        try:
+            for d in descs:
+                pstart = d.page_no * ps
+                s = max(off, pstart)
+                e = min(off + n, pstart + ps)
+                chunk = memoryview(data)[s - off:e - off]
+                idx = f.frames.get(d.page_no)
+                if idx is None and not d.dirty_refs:
+                    # materialize only once the page has no live log refs:
+                    # a frame's image must already contain every committed
+                    # byte of the page, or recovery (which replays the
+                    # frame at its seq) would resurrect pre-ref state
+                    idx = self.pager.alloc(f.fdid, d.page_no)
+                    if idx is not None:
+                        f.frames[d.page_no] = idx
+                        base, valid = self._page_base_image(f, d, pstart)
+                        self.pager.frame_write(idx, f.fdid, d.page_no,
+                                               s - pstart, e - pstart,
+                                               chunk, base, valid)
+                elif idx is not None:
+                    self.pager.frame_write(idx, f.fdid, d.page_no,
+                                           s - pstart, e - pstart,
+                                           chunk, None, 0)
+                if idx is None:
+                    # per-page log fallback (pool exhausted / refs present)
+                    self._append_page_chunk(f, d, bytes(chunk), s)
+                if d.content is not None:
+                    d.content.data[s - pstart:e - pstart] = chunk
+                d.accessed = True
+            with f.size_lock:
+                if off + n > f.size:
+                    f.size = off + n
+                if off + n > f.hwm:
+                    f.hwm = off + n
+        finally:
+            for d in reversed(descs):
+                d.atomic_lock.release()
+
+    def _page_base_image(self, f: File, d, pstart: int) -> tuple:
+        """Committed bytes of page ``d`` for frame materialization, as
+        ``(image, valid_len)``.  Caller holds ``d.atomic_lock`` and has
+        checked ``not d.dirty_refs`` — so a cached content IS the committed
+        state, and absent that the backend is (every log entry for the
+        page has drained)."""
+        ps = self.policy.page_size
+        with f.size_lock:
+            valid = max(0, min(ps, f.size - pstart))
+        if valid == 0:
+            return None, 0
+        if d.content is not None:
+            return bytes(d.content.data[:valid]), valid
+        raw = f.backend.pread(valid, pstart)
+        if len(raw) < valid:
+            raw = raw + bytes(valid - len(raw))
+        return raw, valid
+
+    def _append_page_chunk(self, f: File, d, chunk: bytes, abs_s: int) -> None:
+        """Log fallback for ONE page of a paged-mode write: a normal
+        committed entry group confined to ``d`` (the caller already holds
+        ``d.atomic_lock``)."""
+        def register(sid: int, head: int, k: int, seq: int) -> None:
+            f.shards_touched.add(sid)
+            for ref in self.log.group_refs(sid, head, k, seq, abs_s,
+                                           len(chunk)):
+                d.add_ref(ref)
+
+        _sid, _head, k, _seq = self.log.append(f.fdid, abs_s, chunk,
+                                               on_alloc=register)
+        f.pending.inc(k)
 
     def write(self, fd: int, data: bytes) -> int:
         of = self._of(fd)
@@ -745,34 +1044,51 @@ class NVCache:
             for d in need:                    # ascending, after atomic locks
                 d.cleanup_lock.acquire()
             try:
-                # one backend operation: contiguous runs of missing pages
-                # become the iovec segments (pages loaded/cached in between
-                # are skipped, not re-read)
-                iov = []
-                run_start = prev = None
-                for d in need:
-                    if prev is not None and d.page_no == prev + 1:
-                        prev = d.page_no
-                        continue
-                    if run_start is not None:
-                        iov.append(((prev - run_start + 1) * ps, run_start * ps))
-                    run_start = prev = d.page_no
-                iov.append(((prev - run_start + 1) * ps, run_start * ps))
-                preadv = getattr(f.backend, "preadv", None)
-                if preadv is not None:
-                    chunks = preadv(iov)
-                else:
-                    chunks = [f.backend.pread(nn, oo) for nn, oo in iov]
+                # NVMM-framed pages (paged mode) are served straight from
+                # their frame — the frame IS the committed page image, so
+                # they cost no device read and no replay; only the rest
+                # goes to the backend
+                frames = f.frames if self.pager is not None else {}
+                fetch = [d for d in need if d.page_no not in frames]
                 raw_by_page = {}
-                for (nn, oo), chunk in zip(iov, chunks):
-                    for q in range(oo // ps, (oo + nn) // ps):
-                        raw_by_page[q] = chunk[q * ps - oo:(q + 1) * ps - oo]
+                if fetch:
+                    # one backend operation: contiguous runs of missing
+                    # pages become the iovec segments (pages loaded/cached
+                    # in between are skipped, not re-read)
+                    iov = []
+                    run_start = prev = None
+                    for d in fetch:
+                        if prev is not None and d.page_no == prev + 1:
+                            prev = d.page_no
+                            continue
+                        if run_start is not None:
+                            iov.append(((prev - run_start + 1) * ps,
+                                        run_start * ps))
+                        run_start = prev = d.page_no
+                    iov.append(((prev - run_start + 1) * ps, run_start * ps))
+                    preadv = getattr(f.backend, "preadv", None)
+                    if preadv is not None:
+                        chunks = preadv(iov)
+                    else:
+                        chunks = [f.backend.pread(nn, oo) for nn, oo in iov]
+                    for (nn, oo), chunk in zip(iov, chunks):
+                        for q in range(oo // ps, (oo + nn) // ps):
+                            raw_by_page[q] = chunk[q * ps - oo:(q + 1) * ps - oo]
                 for d, content in zip(need, bufs):
-                    raw = raw_by_page[d.page_no]
-                    content.data[:len(raw)] = raw
-                    if len(raw) < ps:
-                        content.data[len(raw):] = bytes(ps - len(raw))
-                    self._replay_page(d, content)
+                    fidx = frames.get(d.page_no)
+                    if fidx is not None:
+                        view, ln = self.pager.read(fidx)
+                        content.data[:ln] = view
+                        if ln < ps:
+                            content.data[ln:] = bytes(ps - ln)
+                        # no replay: a framed page has no live log refs
+                        # (the ownership invariant — see _pwrite_paged)
+                    else:
+                        raw = raw_by_page[d.page_no]
+                        content.data[:len(raw)] = raw
+                        if len(raw) < ps:
+                            content.data[len(raw):] = bytes(ps - len(raw))
+                        self._replay_page(d, content)
                     self.lru.attach(d, content)
                     d.prefetched = d.page_no != p
             finally:
@@ -848,6 +1164,7 @@ class NVCache:
         backend fsync entirely (see ``File.unlinked``)."""
         self.check()
         with self._meta:
+            self.ns.apply_deferred()   # backend must be current for exists()
             f = self._files.get(path)
             if f is None and not self.tier.exists(path):
                 raise FileNotFoundError(path)
@@ -882,6 +1199,7 @@ class NVCache:
         self.check()
         if old == new:
             with self._meta:
+                self.ns.apply_deferred()
                 if (self._files.get(old) is None
                         and not self.tier.exists(old)):
                     raise FileNotFoundError(old)
@@ -889,6 +1207,7 @@ class NVCache:
         deadline = time.monotonic() + 120.0
         while True:
             with self._meta:
+                self.ns.apply_deferred()   # prior renames must be visible
                 fo = self._lookup_closed_locked(old)
                 fn = self._lookup_closed_locked(new)
                 if fo is None and not self.tier.exists(old):
@@ -901,20 +1220,27 @@ class NVCache:
                         MOP_RENAME,
                         fo.fdid if fo is not None else META_NO_FDID, 0,
                         old, new)
-                    try:
-                        if fo is not None:
-                            self._maybe_retire_locked(fo)
-                        if fn is not None:
-                            self._maybe_retire_locked(fn)
-                        self.tier.rename(old, new)
-                        self.ns.note_backend_applied(mseq)
-                    finally:
-                        self.ns.mark_applied(marks)
-                    self.check()
-                    return
+                    if fo is not None:
+                        self._maybe_retire_locked(fo)
+                    if fn is not None:
+                        self._maybe_retire_locked(fn)
+                    # deferred backend apply (core/namespace.py): the
+                    # slow-tier directory update leaves the _meta critical
+                    # section — queued here, run just below without the
+                    # lock (or by a drain thread if we lose the race)
+                    self.ns.queue_apply(
+                        mseq,
+                        lambda o=old, n=new: self.tier.rename(o, n),
+                        marks)
+                    break
             self._drain_barrier(stale, "rename")
             if time.monotonic() > deadline:
                 raise TimeoutError(f"rename {old} -> {new} could not quiesce")
+        # run the queued apply ourselves, outside _meta: the call returns
+        # with the backend current, but racing namespace ops no longer
+        # serialize behind the directory update
+        self.ns.apply_deferred()
+        self.check()
 
     def ftruncate(self, fd: int, length: int) -> None:
         """Set the open file's length (SQLite WAL reset).  Journaled like
@@ -958,6 +1284,7 @@ class NVCache:
         else:
             f = self._files.get(fd_or_path)
             if f is None:
+                self.ns.apply_deferred()   # queued renames affect existence
                 # stat must not mutate the namespace: Tier.open inserts on
                 # miss, which used to create an empty phantom file here
                 size_of = getattr(self.tier, "size_of", None)
@@ -1005,6 +1332,22 @@ class NVCache:
                                  if self.router else 0.0),
             "route_skipped_uneconomic": (self.router.stats_skipped_uneconomic
                                          if self.router else 0),
+            "route_stripe_widenings": (self.router.stats_stripe_widenings
+                                       if self.router else 0),
             "meta_ops": dict(self.ns.stats_meta_ops),
             "meta_entries": self.ns.stats_meta_entries,
+            "meta_deferred_applies": self.ns.stats_deferred_applies,
+            "mode_migrations": self.stats_mode_migrations,
+            "paged_frames_used": (self.pager.frames_used
+                                  if self.pager else 0),
+            "paged_frame_writes": (self.pager.stats_frame_writes
+                                   if self.pager else 0),
+            "paged_frame_bytes": (self.pager.stats_frame_bytes
+                                  if self.pager else 0),
+            "paged_cow_bytes": (self.pager.stats_cow_bytes
+                                if self.pager else 0),
+            "paged_writebacks": (self.pager.stats_writebacks
+                                 if self.pager else 0),
+            "paged_alloc_fallbacks": (self.pager.stats_alloc_fail
+                                      if self.pager else 0),
         }

@@ -145,6 +145,14 @@ class CleanupThread(threading.Thread):
         pol = self.log.policy
         start = shard.persistent_tail
         if self.meta_gate is not None and self.meta_gate.has_unapplied():
+            # the drain's meta-apply path: a queued deferred apply (rename)
+            # must not depend on its originating thread for progress — run
+            # the queue here before clipping, so the blocking record is
+            # usually already applied by the time we scan for it
+            apply_deferred = getattr(self.meta_gate, "apply_deferred", None)
+            if apply_deferred is not None:
+                apply_deferred()
+        if self.meta_gate is not None and self.meta_gate.has_unapplied():
             run = self._clip_unapplied(start, run)
             if run == 0:                      # blocked at the very tail:
                 time.sleep(1e-3)              # wait out the apply window
@@ -177,6 +185,13 @@ class CleanupThread(threading.Thread):
                 #             bytes die with the name on any crash, so
                 #             device durability buys nothing — this skip is
                 #             what makes deleting a hot journal cheap
+            if getattr(f, "skip_drain_fsync", False):
+                continue    # ftruncate(0) WAL-reset window: the journaled
+                #             truncate (already committed, higher seq) will
+                #             discard these bytes on any crash — same
+                #             reasoning as the unlinked skip, scoped to the
+                #             barrier the truncate itself runs
+
             self.stats_fsyncs += 1            # one request per file per batch
             if self.fsync_scheduler is not None:
                 self.fsync_scheduler.fsync(f.backend)
@@ -333,19 +348,65 @@ class RebalanceThread(threading.Thread):
             self.join(timeout=60)
 
 
+class PagerWritebackThread(threading.Thread):
+    """The paged region's counterpart of the drain threads: flush the
+    oldest dirty frames to the backend when the pool runs hot (over the
+    dirty watermark, or an allocation found the free list short/empty and
+    set the pressure event).  Writeback does NOT free frames — a clean
+    frame is still a valid NVMM-resident cache; freeing happens on mode
+    migration, truncate and retirement (:mod:`repro.core.api`)."""
+
+    POLL_S = 0.01
+
+    def __init__(self, pager, writeback: Callable[[], int]):
+        super().__init__(name="nvcache-pager-wb", daemon=True)
+        self.pager = pager
+        self.writeback = writeback           # owner cb: flush dirty victims
+        self.stop_event = threading.Event()
+        self.error: Optional[BaseException] = None
+        self.stats_rounds = 0
+
+    def run(self) -> None:
+        try:
+            while not self.stop_event.is_set():
+                self.pager.pressure.wait(timeout=self.POLL_S)
+                if self.stop_event.is_set():
+                    return
+                if not (self.pager.pressure.is_set()
+                        or self.pager.over_watermark()):
+                    continue
+                self.pager.pressure.clear()
+                self.stats_rounds += 1
+                while (self.pager.over_watermark()
+                       and not self.stop_event.is_set()):
+                    if self.writeback() == 0:
+                        break                # victims' files unresolvable
+                self.writeback()             # one pass even below watermark
+        except BaseException as exc:         # surfaces in api.check()
+            self.error = exc
+
+    def shutdown(self) -> None:
+        self.stop_event.set()
+        self.pager.pressure.set()            # wake the wait
+        if self.is_alive():
+            self.join(timeout=60)
+
+
 class CleanupPool:
     """One drain thread per shard, addressed collectively or per shard.
 
     The pool owns the cross-shard :class:`FsyncEpochScheduler`: per-shard
     batches that finish around the same time and touch the same backend
     file share one fsync epoch instead of issuing K device fsyncs.  With
-    adaptive routing it also owns the :class:`RebalanceThread`.
+    adaptive routing it also owns the :class:`RebalanceThread`, and with a
+    paged region the :class:`PagerWritebackThread`.
     """
 
     def __init__(self, log: NVLog,
                  resolve_file: Callable[[int], Optional[object]],
                  *, router=None, migrate: Optional[Callable] = None,
-                 meta_gate=None, reap: Optional[Callable] = None):
+                 meta_gate=None, reap: Optional[Callable] = None,
+                 pager=None, writeback: Optional[Callable] = None):
         self.log = log
         self.fsync_scheduler = FsyncEpochScheduler(
             enabled=log.policy.fsync_epoch)
@@ -356,12 +417,17 @@ class CleanupPool:
         self.rebalancer: Optional[RebalanceThread] = None
         if router is not None and migrate is not None:
             self.rebalancer = RebalanceThread(log, router, migrate)
+        self.pager_wb: Optional[PagerWritebackThread] = None
+        if pager is not None and writeback is not None:
+            self.pager_wb = PagerWritebackThread(pager, writeback)
 
     def start(self) -> None:
         for t in self.threads:
             t.start()
         if self.rebalancer is not None:
             self.rebalancer.start()
+        if self.pager_wb is not None:
+            self.pager_wb.start()
 
     def _targets(self, shards: Optional[Iterable[int]]):
         if shards is None:
@@ -381,12 +447,17 @@ class CleanupPool:
         # requests the threads below must still serve before stopping
         if self.rebalancer is not None:
             self.rebalancer.shutdown()
+        if self.pager_wb is not None:
+            self.pager_wb.shutdown()
         for t in self.threads:
             t.shutdown()
 
     def power_loss(self) -> None:
         if self.rebalancer is not None:
             self.rebalancer.stop_event.set()
+        if self.pager_wb is not None:
+            self.pager_wb.stop_event.set()
+            self.pager_wb.pager.pressure.set()
         for t in self.threads:
             t.hard_stop.set()
             t.stop_event.set()
@@ -395,6 +466,8 @@ class CleanupPool:
             t.join(timeout=60)
         if self.rebalancer is not None and self.rebalancer.is_alive():
             self.rebalancer.join(timeout=60)
+        if self.pager_wb is not None and self.pager_wb.is_alive():
+            self.pager_wb.join(timeout=60)
 
     # ------------------------------------------------------------- status
     @property
@@ -402,8 +475,10 @@ class CleanupPool:
         for t in self.threads:
             if t.error is not None:
                 return t.error
-        if self.rebalancer is not None:
+        if self.rebalancer is not None and self.rebalancer.error is not None:
             return self.rebalancer.error
+        if self.pager_wb is not None:
+            return self.pager_wb.error
         return None
 
     @property

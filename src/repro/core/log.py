@@ -1,9 +1,24 @@
 """The NVMM write log (paper §II-B, §II-D, §III Algorithm 1), sharded.
 
-Layout inside the NVMM region::
+Layout inside the NVMM region (VERSION 4)::
 
-    [superblock + shard tail table | fd-path table | route table | shard 0
-     | ... | shard K-1]
+    [superblock + shard tail table | fd-path table | route table
+     | paged region (page_frames frames; empty when page_frames == 0)
+     | shard 0 | ... | shard K-1]
+
+The *paged region* (VERSION 4, :mod:`repro.core.pager`) is the second
+persistence mode: per-file page frames whose overwrites are absorbed in
+place instead of appended here.  The two modes compose under one ordering
+rule — every frame commit draws its ``seq`` from the same global
+:meth:`NVLog.next_seq` counter as log groups, so recovery merges frame
+images and log groups into a single ascending-seq replay.  Routing
+invariant: a (file, page) is persisted by exactly one mode at a time — a
+frame is only materialized for a page with zero live log refs, a framed
+page's writes never append to the log, and mode flips happen behind the
+per-file freeze + drain barrier — so for any page either the log holds the
+newest committed bytes, or the frame does (with a strictly larger seq than
+any drained log entry for that page); never a mix that recovery could
+interleave wrongly.
 
 The region is partitioned into ``K = policy.shards`` independent sub-logs
 (*shards*), each a circular array of fixed-size entries with its own
@@ -62,9 +77,11 @@ from repro.core.nvmm import NVMM
 from repro.core.policy import Policy, SUPERBLOCK
 
 MAGIC = 0x4E56_4341_4348_4532  # "NVCACHE2" (v1 was the unsharded layout)
-VERSION = 3                    # v3 added the persisted route table region
+VERSION = 4                    # v3 added the persisted route table region;
+#                                v4 added the paged region (dual persistence)
 
-_SB = struct.Struct("<QIIIIII")   # magic, ver, entry_size, entries/shard, shards, fd_max, path_max
+_SB = struct.Struct("<QIIIIIII")  # magic, ver, entry_size, entries/shard,
+#                                   shards, fd_max, path_max, page_frames
 _HDR = struct.Struct("<QQQIIII")  # cg, seq, off, fdid, length, nfollow, crc
 HDR_SIZE = 48                     # header struct (44B) padded to 48
 assert _HDR.size <= HDR_SIZE
@@ -492,6 +509,11 @@ class NVLog:
             self._check_superblock()
             if adopt:
                 self._seq = max(sh.attach() for sh in self.shards)
+                if policy.page_frames:
+                    # frames draw from the same seq counter: never reuse a
+                    # seq below a live frame's (recovery merges by seq)
+                    from repro.core.pager import max_frame_seq
+                    self._seq = max(self._seq, max_frame_seq(nvmm, policy))
                 # a persisted route record means a rebalance-enabled
                 # instance installed overrides while (possibly) leaving
                 # live entries in the overridden shards.  Honor it even if
@@ -502,8 +524,8 @@ class NVLog:
                 # owner that enables rebalancing replaces this router with
                 # its own (loaded from the same record, so routes agree).
                 from repro.core.router import EpochRouter, load_route_record
-                epoch, table = load_route_record(nvmm, policy)
-                if epoch or table:
+                epoch, table, shifts = load_route_record(nvmm, policy)
+                if epoch or table or shifts:
                     # route-only (sampling=False): without a rebalance
                     # thread nobody would ever drain the load counters
                     self.router = EpochRouter(nvmm, policy, sampling=False)
@@ -515,10 +537,13 @@ class NVLog:
 
     # ------------------------------------------------------------ superblock
     def _format(self) -> None:
+        # zeroes everything below the shards — fd table, route table, and
+        # (VERSION 4) every paged-frame header, so a reformat frees frames
         self.nvmm.store(0, b"\x00" * self.policy.entries_base)
         self.nvmm.store(0, _SB.pack(MAGIC, VERSION, self.entry_size, self.n,
                                     self.policy.shards, self.policy.fd_max,
-                                    self.policy.path_max))
+                                    self.policy.path_max,
+                                    self.policy.page_frames))
         self.nvmm.pwb(0, self.policy.entries_base)
         for sh in self.shards:
             sh.format()
@@ -526,11 +551,14 @@ class NVLog:
         self._seq = 0
 
     def _check_superblock(self) -> None:
-        magic, ver, esz, n, k, fdm, pm = _SB.unpack_from(self.nvmm.load(0, _SB.size))
+        magic, ver, esz, n, k, fdm, pm, pf = _SB.unpack_from(
+            self.nvmm.load(0, _SB.size))
         if magic != MAGIC or ver != VERSION:
             raise ValueError("not an NVCache log region")
         if esz != self.entry_size or n != self.n or k != self.policy.shards:
             raise ValueError("policy mismatch with on-NVMM superblock")
+        if pf != self.policy.page_frames:
+            raise ValueError("paged-region mismatch with on-NVMM superblock")
 
     # ------------------------------------------------------------- fd table
     def fd_table_set(self, fdid: int, path: str) -> None:

@@ -58,9 +58,24 @@ the backend namespace mutation is done.  The drain
 short of the first still-marked metadata entry and retries — deletes and
 backend renames are thus consumed only after they are both *covered*
 (barrier) and *applied*.  Recovery replays a still-logged op idempotently.
+
+Deferred backend apply
+----------------------
+``rename`` used to apply its backend effect synchronously under the
+file-table lock, stalling every racing namespace op behind a slow-tier
+directory update.  It now journals under the lock and enqueues the apply
+(:meth:`Namespace.queue_apply`); the queue is drained FIFO by
+:meth:`Namespace.apply_deferred` — called by the renaming thread itself
+right after releasing the lock (so the backend is current by the time the
+call returns), by any namespace op that is about to consult backend state,
+and by the drain threads whenever an unapplied record blocks a batch (the
+drain's meta-apply path: progress never depends on the original caller).
+Applying is idempotent to re-entry because the queue pops under its own
+lock and each apply runs exactly once.
 """
 from __future__ import annotations
 
+import collections
 import threading
 from typing import Dict, List, Optional, Set, Tuple
 
@@ -97,9 +112,12 @@ class Namespace:
         #                                                consumed by the drain
         self._ua_lock = threading.Lock()
         self._consumed = threading.Condition(self._ua_lock)
+        self._deferred = collections.deque()      # (seq, fn, marks) FIFO
+        self._apply_lock = threading.Lock()       # serializes appliers
         self.stats_meta_ops = {"create": 0, "rename": 0, "unlink": 0,
                                "ftruncate": 0}
         self.stats_meta_entries = 0               # log entries appended
+        self.stats_deferred_applies = 0           # queued backend applies run
 
     # ------------------------------------------------------------ journal
     def journal(self, op: int, fdid: int, aux: int, a: str,
@@ -152,6 +170,35 @@ class Namespace:
         in the device model, durable): the drain may now consume it."""
         with self._ua_lock:
             self._unapplied.difference_update(marks)
+
+    # ------------------------------------------------------ deferred apply
+    def queue_apply(self, seq: int, fn, marks: List[Tuple[int, int]]) -> None:
+        """Enqueue a journaled op's backend effect (see the module
+        docstring).  The record's unapplied markers stay set until the
+        apply runs, so the drain cannot retire it early."""
+        self._deferred.append((seq, fn, marks))
+
+    def apply_deferred(self) -> int:
+        """Run every queued backend apply, FIFO; returns how many ran.
+        Safe from any thread (appliers serialize on ``_apply_lock``); an
+        apply that raises still advances the watermark and clears its
+        markers — the journaled record was consumed conceptually, and
+        leaving the markers set would wedge the drain forever — then the
+        error propagates to whichever applier happened to pop it."""
+        ran = 0
+        with self._apply_lock:
+            while True:
+                try:
+                    seq, fn, marks = self._deferred.popleft()
+                except IndexError:
+                    return ran
+                try:
+                    fn()
+                finally:
+                    self.note_backend_applied(seq)
+                    self.mark_applied(marks)
+                    self.stats_deferred_applies += 1
+                    ran += 1
 
     # ---------------------------------------------------------- drain gate
     def has_unapplied(self) -> bool:

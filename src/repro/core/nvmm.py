@@ -28,6 +28,25 @@ Crash model (standard persistent-memory testing model, e.g. Yat):
 
 ``track=False`` disables the shadow entirely (used by benchmarks where only
 the volatile view matters for throughput).
+
+Region map (layout VERSION 4, offsets computed by
+:class:`repro.core.policy.Policy`)::
+
+    0             superblock (magic/version/geometry) + per-shard
+                  persistent tails (one cacheline each, from SHARD_TAILS)
+    SUPERBLOCK    fd-path table (fd_max slots of path_max bytes)
+    route_base    persisted route record (epoch + overrides + stripe-width
+                  tuning entries, CRC'd header)
+    page_base     paged region (VERSION 4): page_frames in-place frames,
+                  each [header cacheline | 2 ping-pong page slots] — see
+                  :mod:`repro.core.pager`
+    entries_base  K shard logs of entries_per_shard fixed-size entries
+
+Two persistence modes share the region: log shards (append + drain) and
+paged frames (in-place overwrite + writeback).  They are seq-fenced
+against each other — both draw commit seqs from one global counter, and
+recovery replays their union in ascending seq — and a given (file, page)
+is owned by exactly one mode at a time (see :mod:`repro.core.log`).
 """
 from __future__ import annotations
 

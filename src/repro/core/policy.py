@@ -31,6 +31,21 @@ The route table is persisted next to the superblock (``route_base``) so an
 attach after a mid-epoch crash routes exactly as before the crash.
 ``shard_rebalance=False`` (the default, and the paper baseline) leaves the
 static routes bit-identical to the PR 3 behavior.
+
+Dual persistence (layout VERSION 4, cf. "NVMM cache design: Logging vs.
+Paging"): ``page_frames > 0`` carves a *paged region* out of the NVMM
+between the route table and the shard logs.  Each frame holds one
+read-cache-page-sized file page as a ping-pong pair of data slots plus a
+one-cacheline header (seq / fdid / page / active slot / length / crc), so
+an overwrite builds the new page image in the inactive slot and commits it
+with a single atomic header flip — in place, with no log append and no
+drain replay.  A per-file :class:`StreamClassifier` watches each write
+stream (average write size and overwrite ratio over ``classify_window``
+writes, the write-side twin of the ``File.ra_next`` readahead detector)
+and routes the stream to log or page mode; mode flips take the same
+freeze + drain-barrier protocol as route migrations.  ``page_frames=0``
+(the default) leaves the layout byte-identical to VERSION 3 modulo the
+superblock version/field.
 """
 from __future__ import annotations
 
@@ -49,6 +64,8 @@ SHARD_TAILS = 64   # per-shard persistent tails start here, one cacheline each
 MAX_SHARDS = (SUPERBLOCK - SHARD_TAILS) // CACHELINE
 ROUTE_HDR = 16     # persisted route record header (epoch, count, crc)
 ROUTE_ENT = 12     # one persisted route override (key u64, sid u32)
+FRAME_HDR = 64     # paged-region frame header: one cacheline, so the
+#                    commit (header overwrite) is a single-line atomic store
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,6 +123,23 @@ class Policy:
     #                                     stay inside a key's group (1 == any
     #                                     shard is a candidate target)
     route_table_max: int = 64           # max persisted route overrides
+    # dual persistence (VERSION 4, see module docstring): paged NVMM region
+    # absorbing large / overwrite-heavy streams in place.  0 == log-only,
+    # layout-compatible with VERSION 3.
+    page_frames: int = 0                # frames in the paged region
+    classify_window: int = 32           # writes per classifier window
+    page_min_avg_write: int = 0         # avg write size that votes "page";
+    #                                     0 == default to page_size
+    page_overwrite_ratio: float = 0.5   # overwrite fraction that votes "page"
+    page_wb_watermark: float = 0.75     # dirty-frame fraction that wakes the
+    #                                     background writeback path
+    # stripe-width auto-tuning (router follow-up): a fdid that stays hot for
+    # this many consecutive rebalance epochs gets its stripe narrowed (fan-out
+    # widened across shards) instead of being re-migrated each epoch.  0
+    # disables tuning.
+    stripe_tune_streak: int = 3
+    stripe_tune_max_shift: int = 4      # stripe never narrows below
+    #                                     stripe_bytes >> max_shift (>= page)
 
     def __post_init__(self):
         if self.page_size & (self.page_size - 1):
@@ -129,6 +163,18 @@ class Policy:
             raise ValueError("rebalance_epoch_ms must be > 0")
         if self.route_table_max < 1:
             raise ValueError("route_table_max must be >= 1")
+        if self.page_frames < 0:
+            raise ValueError("page_frames must be >= 0")
+        if self.classify_window < 2:
+            raise ValueError("classify_window must be >= 2")
+        if not 0.0 < self.page_overwrite_ratio <= 1.0:
+            raise ValueError("page_overwrite_ratio must be in (0, 1]")
+        if not 0.0 < self.page_wb_watermark <= 1.0:
+            raise ValueError("page_wb_watermark must be in (0, 1]")
+        if self.stripe_tune_streak < 0:
+            raise ValueError("stripe_tune_streak must be >= 0")
+        if self.stripe_tune_max_shift < 0:
+            raise ValueError("stripe_tune_max_shift must be >= 0")
         if not 1 <= self.placement_groups <= self.shards:
             raise ValueError("placement_groups must be in [1, shards]")
         if self.shards % self.placement_groups:
@@ -173,8 +219,24 @@ class Policy:
         return ROUTE_HDR + self.route_table_max * ROUTE_ENT
 
     @property
-    def entries_base(self) -> int:
+    def page_base(self) -> int:
+        """Start of the paged region (VERSION 4): page-aligned, between the
+        route table and the shard logs.  Empty when ``page_frames == 0``."""
         base = self.route_base + self.route_table_bytes
+        return (base + self.page_size - 1) & ~(self.page_size - 1)
+
+    @property
+    def frame_size(self) -> int:
+        """One paged frame: header cacheline + two ping-pong data slots."""
+        return FRAME_HDR + 2 * self.page_size
+
+    @property
+    def page_region_bytes(self) -> int:
+        return self.page_frames * self.frame_size
+
+    @property
+    def entries_base(self) -> int:
+        base = self.page_base + self.page_region_bytes
         return (base + self.page_size - 1) & ~(self.page_size - 1)
 
     def placement_group(self, sid: int) -> int:
@@ -191,6 +253,14 @@ class Policy:
         if self.shard_route == "fdid":
             return fdid % self.shards
         return (fdid + off // self.stripe_bytes) % self.shards
+
+    def frame_base(self, idx: int) -> int:
+        return self.page_base + idx * self.frame_size
+
+    @property
+    def page_min_avg(self) -> int:
+        """Effective classifier size threshold (0 defaults to page_size)."""
+        return self.page_min_avg_write or self.page_size
 
     def shard_base(self, sid: int) -> int:
         return self.entries_base + sid * self.entries_per_shard * self.entry_size
@@ -220,6 +290,91 @@ PAPER_DEFAULT = Policy(
     readahead_pages=1,
     readahead_ramp=False,
 )
+
+class StreamClassifier:
+    """Per-file write-stream classifier for the dual persistence engine.
+
+    The write-side twin of the ``File.ra_next`` readahead detector: instead
+    of watching miss offsets it watches write sizes and page reuse.  Every
+    ``classify_window`` writes it closes a window and votes:
+
+    * ``"page"`` if the window's average write size reaches
+      ``page_min_avg`` (large streams — the log's double copy dominates), or
+      if at least ``page_overwrite_ratio`` of the window's bytes landed on
+      pages already written recently *and* writes are at least half a page
+      (rewrite-heavy streams — in-place frames absorb the churn);
+    * ``"log"`` otherwise (small synchronous writes — append wins).
+
+    A mode switch needs two consecutive windows voting the same way
+    (hysteresis), so a flip-flop stream that alternates window by window
+    never migrates.  The classifier only *proposes*: :meth:`note_write`
+    returns the new mode when a switch is confirmed and the caller flips
+    ``mode`` once the migration actually lands (a failed freeze leaves the
+    proposal standing, so it fires again next window).
+    """
+
+    __slots__ = ("page_size", "window", "min_avg", "ow_ratio",
+                 "mode", "_vote", "_count", "_bytes", "_ow_bytes",
+                 "_pages", "_prev_pages", "stats_windows", "stats_switches")
+
+    _PAGES_CAP = 8192  # bound the recent-page sets for huge streams
+
+    def __init__(self, policy: Policy):
+        self.page_size = policy.page_size
+        self.window = policy.classify_window
+        self.min_avg = policy.page_min_avg
+        self.ow_ratio = policy.page_overwrite_ratio
+        self.mode = "log"
+        self._vote = None        # last window's vote, for hysteresis
+        self._count = 0
+        self._bytes = 0
+        self._ow_bytes = 0
+        self._pages = set()      # pages written in the open window
+        self._prev_pages = set() # pages written in the previous window
+        self.stats_windows = 0
+        self.stats_switches = 0
+
+    def note_write(self, off: int, n: int):
+        """Record one write; returns ``"log"``/``"page"`` when a confirmed
+        mode switch is proposed, else ``None``."""
+        if n <= 0:
+            return None
+        ps = self.page_size
+        p0, p1 = off // ps, (off + n - 1) // ps
+        for p in range(p0, p1 + 1):
+            if p in self._pages or p in self._prev_pages:
+                s = max(off, p * ps)
+                e = min(off + n, (p + 1) * ps)
+                self._ow_bytes += e - s
+            elif len(self._pages) < self._PAGES_CAP:
+                self._pages.add(p)
+        self._count += 1
+        self._bytes += n
+        if self._count < self.window:
+            return None
+        return self._close_window()
+
+    def _close_window(self):
+        avg = self._bytes / self._count
+        ow = self._ow_bytes / self._bytes if self._bytes else 0.0
+        want = ("page" if avg >= self.min_avg
+                or (ow >= self.ow_ratio and 2 * avg >= self.min_avg)
+                else "log")
+        prev_vote = self._vote
+        self._vote = want
+        self._prev_pages = self._pages
+        self._pages = set()
+        self._count = self._bytes = self._ow_bytes = 0
+        self.stats_windows += 1
+        if want != self.mode and prev_vote == want:
+            self.stats_switches += 1
+            return want
+        return None
+
+    def confirm(self, mode: str) -> None:
+        """The caller completed the migration; the stream is now ``mode``."""
+        self.mode = mode
+
 
 #: Small configuration for unit/property tests.
 TEST_SMALL = Policy(

@@ -70,6 +70,9 @@ class RecoveryStats:
     #                              after its unlink (POSIX: they died with
     #                              the name — replaying them would re-create
     #                              the dead path around a racing writer)
+    frames_seen: int = 0         # mapped paged-region frames found (v4)
+    frames_replayed: int = 0     # frames whose image reached the backend
+    frames_dropped: int = 0      # frames failing CRC (dropped whole)
 
 
 def recover(nvmm: NVMM, policy: Policy,
@@ -91,7 +94,7 @@ def recover(nvmm: NVMM, policy: Policy,
         tier = owner if hasattr(owner, "unlink") else None
     log = NVLog(nvmm, policy, format=False, adopt=False)
     stats = RecoveryStats(shards=policy.shards)
-    stats.route_epoch, _ = load_route_record(nvmm, policy)
+    stats.route_epoch, _, _ = load_route_record(nvmm, policy)
 
     # phase 1: scan each shard independently, collecting committed groups
     # (head entry + its committed followers) in shard-log order.
@@ -110,6 +113,25 @@ def recover(nvmm: NVMM, policy: Policy,
     total = log.n * policy.shards
     stats.holes_skipped = total - seen if seen <= total else 0
 
+    # phase 1b (layout v4): fold each mapped paged-region frame into the
+    # merge as a synthetic one-entry group at the frame's commit seq.  The
+    # frame protocol (core/pager.py) guarantees the active slot is a whole
+    # committed page image, so it flows through the same machinery as a
+    # log group: CRC validation, the dead-fdid barrier, the orphan drop
+    # for retired fd-table slots, and seq ordering against metadata ops —
+    # a frame overwritten before a journaled ftruncate replays before the
+    # cut, one committed after it replays after.  ``sid=policy.shards``
+    # (one past the last real shard) keeps the sort key well-defined.
+    if policy.page_frames:
+        from repro.core.pager import scan_frames
+        ps = policy.page_size
+        for fr in scan_frames(nvmm, policy):
+            stats.frames_seen += 1
+            groups.append((fr.seq, policy.shards,
+                           [Entry(policy.shards, fr.idx, CG_HEAD, fr.seq,
+                                  fr.page_no * ps, fr.fdid, fr.length, 0,
+                                  fr.crc, fr.data)]))
+
     # phase 2: merge by global commit sequence; validate whole groups.  A
     # group is all-or-nothing: one bad CRC (or a missing follower) drops the
     # entire group, never just the failing entry — a multi-entry pwrite must
@@ -122,6 +144,8 @@ def recover(nvmm: NVMM, policy: Policy,
         stats.crc_failures += bad
         if bad or len(entries) != 1 + entries[0].nfollow:
             stats.groups_dropped += 1
+            if sid == policy.shards:
+                stats.frames_dropped += 1
             continue
         if entries[0].fdid == META_FDID:
             try:   # a namespace record must also parse; torn == dropped whole
@@ -170,7 +194,7 @@ def recover(nvmm: NVMM, policy: Policy,
     dead: Dict[int, str] = {}
     done_groups = 0
     try:
-        for gi, (seq, _sid, entries) in enumerate(valid):
+        for gi, (seq, gsid, entries) in enumerate(valid):
             if entries[0].fdid == META_FDID:
                 op, mfdid, _aux, a, _b = decode_meta(
                     b"".join(bytes(e.data) for e in entries))
@@ -204,6 +228,8 @@ def recover(nvmm: NVMM, policy: Policy,
                 f.pwrite(bytes(e.data), e.off)
                 stats.entries_replayed += 1
                 stats.bytes_replayed += e.length
+            if gsid == policy.shards:
+                stats.frames_replayed += 1
             done_groups = gi + 1
     except BaseException:
         # a raising open_backend/pwrite must not leak the already-opened

@@ -71,6 +71,17 @@ from the most- to the least-loaded shard, only while the imbalance ratio
 exceeds ``MIN_RATIO`` and each move strictly improves the spread, and never
 more than ``MAX_MIGRATIONS_PER_EPOCH`` per group per epoch (each migration
 costs a per-file drain barrier, so convergence is rate-limited by design).
+
+Stripe-width auto-tuning (the rebalancing follow-up): a fdid the planner
+wants to migrate ``Policy.stripe_tune_streak`` epochs in a row is
+*persistently* hot — per-stripe moves are chasing it without converging.
+Instead of another migration, :meth:`EpochRouter.plan` emits a width
+change (``Migration.new_shift``): the fdid's stripe is halved, doubling
+its fan-out across shards via the static formula, and every per-stripe
+override it owned is dropped in the same epoch.  The install rides the
+same freeze + drain-barrier protocol, so the re-keying can never strand a
+live entry, and the per-fdid shifts are persisted in the route record
+(flag-tagged entries) so an attach routes with the tuned width.
 """
 from __future__ import annotations
 
@@ -91,6 +102,11 @@ assert _RT_ENT.size == ROUTE_ENT
 # 40-bit field (≈ petabyte offsets at default stripe width) stay static
 _STRIPE_BITS = 40
 _STRIPE_MASK = (1 << _STRIPE_BITS) - 1
+
+# persisted stripe-width tuning entries share the route record: a record
+# entry whose key has this flag set maps fdid -> stripe shift, not key ->
+# sid.  Real route keys never reach bit 63 (fdid < fd_max << 40).
+_WIDTH_FLAG = 1 << 63
 
 MIN_RATIO = 1.5                # hot/cold load ratio needed before migrating
 MIN_EPOCH_ENTRIES = 16         # ignore epochs with almost no traffic
@@ -128,17 +144,25 @@ class Migration:
     """One planned route change: move ``key`` (owned by ``fdid``) from
     shard ``old_sid`` to ``new_sid``."""
 
-    __slots__ = ("key", "fdid", "old_sid", "new_sid", "load")
+    __slots__ = ("key", "fdid", "old_sid", "new_sid", "load", "new_shift")
 
     def __init__(self, key: int, fdid: int, old_sid: int, new_sid: int,
-                 load: int):
+                 load: int, new_shift: Optional[int] = None):
         self.key = key
         self.fdid = fdid
         self.old_sid = old_sid
         self.new_sid = new_sid
         self.load = load
+        # stripe-width tuning: when set, this "migration" narrows the
+        # fdid's stripe to stripe_bytes >> new_shift (widening its fan-out
+        # across shards) instead of moving one key — same freeze + drain
+        # barrier, different install
+        self.new_shift = new_shift
 
     def __repr__(self) -> str:
+        if self.new_shift is not None:
+            return (f"Migration(fdid={self.fdid}, widen->shift="
+                    f"{self.new_shift}, load={self.load})")
         return (f"Migration(key={self.key:#x}, fdid={self.fdid}, "
                 f"{self.old_sid}->{self.new_sid}, load={self.load})")
 
@@ -172,15 +196,25 @@ class EpochRouter:
         self.stats_skew_ratio = 0.0            # last epoch's hot/cold ratio
         self.stats_skipped_uneconomic = 0      # moves rejected by the cost
         #                                        model (barrier > gain)
-        epoch, table = load_route_record(nvmm, policy)
+        self.stats_stripe_widenings = 0        # width-tuning installs
+        self._streak: Dict[int, int] = {}      # fdid -> consecutive epochs
+        #                                        the planner wanted to move it
+        epoch, table, shifts = load_route_record(nvmm, policy)
         self.epoch = epoch
         self.table = table
+        self.stripe_shift: Dict[int, int] = shifts  # fdid -> width shift
+        #   (immutable like ``table``: installs swap a fresh dict)
 
     # ---------------------------------------------------------------- route
+    def stripe_bytes_of(self, fdid: int) -> int:
+        """Effective stripe width of ``fdid`` (auto-tuning may have narrowed
+        it below ``policy.stripe_bytes`` to widen the file's shard fan-out)."""
+        return self.policy.stripe_bytes >> self.stripe_shift.get(fdid, 0)
+
     def key_of(self, fdid: int, off: int) -> Optional[int]:
         if self.policy.shard_route == "fdid":
             return fdid
-        stripe = off // self.policy.stripe_bytes
+        stripe = off // self.stripe_bytes_of(fdid)
         if stripe > _STRIPE_MASK:
             return None
         return (fdid << _STRIPE_BITS) | stripe
@@ -193,10 +227,16 @@ class EpochRouter:
         """A file offset inside the key's stripe (0 in fdid mode) —
         enough to reconstruct the static route of the key."""
         if self.policy.shard_route == "stripe":
-            return (key & _STRIPE_MASK) * self.policy.stripe_bytes
+            fdid = key >> _STRIPE_BITS
+            return (key & _STRIPE_MASK) * self.stripe_bytes_of(fdid)
         return 0
 
     def static_route(self, fdid: int, off: int) -> int:
+        sh = self.stripe_shift.get(fdid)
+        if sh and self.policy.shard_route == "stripe" \
+                and self.policy.shards > 1:
+            return (fdid + off // (self.policy.stripe_bytes >> sh)) \
+                % self.policy.shards
         return self.policy.static_shard(fdid, off)
 
     def static_sid_of_key(self, key: int) -> int:
@@ -263,7 +303,8 @@ class EpochRouter:
         # migrations that will need a NEW table slot must fit: planning a
         # move install() will refuse just burns a freeze + drain barrier
         # on the hot file, every epoch, forever
-        free_slots = self.policy.route_table_max - len(self.table)
+        free_slots = self.policy.route_table_max - len(self.table) \
+            - len(self.stripe_shift)
         out: List[Migration] = []
         for g in range(self.policy.placement_groups):
             group = [s for s in range(k)
@@ -317,7 +358,43 @@ class EpochRouter:
                 loads[hot] -= key_load[best]
                 loads[cold] += key_load[best]
                 key_sid[best] = cold
-        return out
+        return self._tune_widths(out)
+
+    def _tune_widths(self, out: List[Migration]) -> List[Migration]:
+        """Stripe-width auto-tuning: a fdid the planner keeps wanting to
+        migrate — ``stripe_tune_streak`` consecutive epochs — is hot enough
+        that chasing individual stripes (at most ``MAX_MIGRATIONS_PER_EPOCH``
+        per epoch, a drain barrier each) never converges.  Replace its
+        per-key moves with ONE width change: halving the fdid's stripe
+        doubles its shard fan-out, spreading the load by the static formula
+        with no per-stripe overrides at all."""
+        pol = self.policy
+        if pol.shard_route != "stripe" or pol.stripe_tune_streak <= 0 \
+                or pol.shards == 1:
+            return out
+        moved = {m.fdid for m in out}
+        # a miss resets the streak: "persistently hot" means consecutive
+        self._streak = {f: self._streak.get(f, 0) + 1 for f in moved}
+        widened = set()
+        tuned: List[Migration] = []
+        for fdid in sorted(moved):
+            shift = self.stripe_shift.get(fdid, 0)
+            if (self._streak.get(fdid, 0) < pol.stripe_tune_streak
+                    or shift >= pol.stripe_tune_max_shift
+                    or pol.stripe_bytes >> (shift + 1) < pol.page_size
+                    # the narrowed stripe must stay page-aligned: a page
+                    # spanning two stripes would break the overlap
+                    # invariant (and the paged mode's per-page fallback)
+                    or (pol.stripe_bytes >> (shift + 1)) % pol.page_size):
+                continue
+            load = sum(m.load for m in out if m.fdid == fdid)
+            tuned.append(Migration(0, fdid, -1, -1, load,
+                                   new_shift=shift + 1))
+            widened.add(fdid)
+            self._streak.pop(fdid, None)
+        if not widened:
+            return out
+        return [m for m in out if m.fdid not in widened] + tuned
 
     # -------------------------------------------------------------- install
     def install(self, key: int, sid: int) -> bool:
@@ -330,17 +407,46 @@ class EpochRouter:
                 table.pop(key, None)           # back to static: drop override
             else:
                 table[key] = sid
-            if len(table) > self.policy.route_table_max:
+            cap = self.policy.route_table_max - len(self.stripe_shift)
+            if len(table) > cap:
                 # drop overrides that merely restate the static route
                 for ikey in list(table):
                     if table[ikey] == self.static_sid_of_key(ikey):
                         del table[ikey]
-                if len(table) > self.policy.route_table_max:
+                if len(table) > cap:
                     return False
             self.epoch += 1
             self.table = table                 # atomic publish
             self._persist_locked()
             self.stats_installs += 1
+            return True
+
+    def install_width(self, fdid: int, shift: int) -> bool:
+        """Publish a stripe-width change for ``fdid`` and persist it.  The
+        fdid's per-key overrides are dropped in the same epoch — their
+        stripe indices are in old-width units.  The caller holds the file's
+        freeze + drain barrier, so no shard holds a live entry routed under
+        the old width: the first post-install write can't overlap anything
+        the old routing placed elsewhere (same argument as a migration)."""
+        pol = self.policy
+        if pol.shard_route != "stripe":
+            return False
+        with self._lock:
+            table = {k: s for k, s in self.table.items()
+                     if self.key_fdid(k, pol) != fdid}
+            shifts = dict(self.stripe_shift)
+            if shift <= 0:
+                shifts.pop(fdid, None)
+            else:
+                shifts[fdid] = shift
+            if len(table) + len(shifts) > pol.route_table_max:
+                return False
+            self.epoch += 1
+            self.table = table                 # atomic publish (route first:
+            self.stripe_shift = shifts         # stale key lookups just miss)
+            self._persist_locked()
+            self.stats_installs += 1
+            self.stats_stripe_widenings += 1
             return True
 
     def drop_fdid(self, fdid: int) -> bool:
@@ -355,10 +461,15 @@ class EpochRouter:
         with self._lock:
             table = {k: s for k, s in self.table.items()
                      if self.key_fdid(k, self.policy) != fdid}
-            if len(table) == len(self.table):
+            shifts = {f: s for f, s in self.stripe_shift.items()
+                      if f != fdid}
+            if len(table) == len(self.table) \
+                    and len(shifts) == len(self.stripe_shift):
                 return False
             self.epoch += 1
             self.table = table
+            self.stripe_shift = shifts
+            self._streak.pop(fdid, None)
             self._persist_locked()
             return True
 
@@ -368,37 +479,43 @@ class EpochRouter:
         the old record or the new one, never a half-record that parses (the
         CRC covers payload + epoch + count)."""
         pol = self.policy
-        payload = b"".join(_RT_ENT.pack(key, sid)
-                           for key, sid in sorted(self.table.items()))
+        entries = sorted(self.table.items())
+        entries += [(_WIDTH_FLAG | fdid, shift)
+                    for fdid, shift in sorted(self.stripe_shift.items())]
+        payload = b"".join(_RT_ENT.pack(key, val) for key, val in entries)
         base = pol.route_base
         if payload:
             self.nvmm.store(base + ROUTE_HDR, payload)
             self.nvmm.pwb(base + ROUTE_HDR, len(payload))
             self.nvmm.pfence()
         crc = zlib.crc32(payload + struct.pack("<QI", self.epoch,
-                                               len(self.table)))
-        self.nvmm.store(base, _RT_HDR.pack(self.epoch, len(self.table), crc))
+                                               len(entries)))
+        self.nvmm.store(base, _RT_HDR.pack(self.epoch, len(entries), crc))
         self.nvmm.pwb(base, ROUTE_HDR)
         self.nvmm.psync()
 
 
 def load_route_record(nvmm: NVMM, policy: Policy
-                      ) -> Tuple[int, Dict[int, int]]:
-    """Read the persisted route record; ``(0, {})`` when absent or torn
-    (CRC mismatch — e.g. a crash mid-install before the header landed).
-    Recovery also calls this to report the epoch it recovered across."""
+                      ) -> Tuple[int, Dict[int, int], Dict[int, int]]:
+    """Read the persisted route record as ``(epoch, table, stripe_shifts)``;
+    ``(0, {}, {})`` when absent or torn (CRC mismatch — e.g. a crash
+    mid-install before the header landed).  Recovery also calls this to
+    report the epoch it recovered across."""
     base = policy.route_base
     epoch, count, crc = _RT_HDR.unpack_from(nvmm.load(base, ROUTE_HDR))
     if epoch == 0 and count == 0 and crc == 0:
-        return 0, {}
+        return 0, {}, {}
     if count > policy.route_table_max:
-        return 0, {}
+        return 0, {}, {}
     payload = bytes(nvmm.load(base + ROUTE_HDR, count * ROUTE_ENT))
     if zlib.crc32(payload + struct.pack("<QI", epoch, count)) != crc:
-        return 0, {}
+        return 0, {}, {}
     table: Dict[int, int] = {}
+    shifts: Dict[int, int] = {}
     for i in range(count):
-        key, sid = _RT_ENT.unpack_from(payload, i * ROUTE_ENT)
-        if sid < policy.shards:
-            table[key] = sid
-    return epoch, table
+        key, val = _RT_ENT.unpack_from(payload, i * ROUTE_ENT)
+        if key & _WIDTH_FLAG:
+            shifts[key & ~_WIDTH_FLAG] = val
+        elif val < policy.shards:
+            table[key] = val
+    return epoch, table, shifts

@@ -146,7 +146,7 @@ def test_crash_mid_install_leaves_record_old_or_new(k):
         rng = random.Random(fuse)
         nvmm.crash(choose_evicted=lambda lines: [l for l in lines
                                                  if rng.random() < 0.5])
-        epoch, table = load_route_record(nvmm, pol)
+        epoch, table, _shifts = load_route_record(nvmm, pol)
         assert epoch in (0, 1, 2)
         for key, sid in table.items():
             assert 0 <= sid < k

@@ -70,8 +70,8 @@ def test_override_reroutes_and_install_roundtrip():
     # installing the static route drops the override instead of growing
     assert router.install(0, 0)
     assert router.table == {}
-    epoch, table = load_route_record(nvmm, pol)
-    assert epoch == 2 and table == {}
+    epoch, table, shifts = load_route_record(nvmm, pol)
+    assert epoch == 2 and table == {} and shifts == {}
 
 
 def test_torn_route_record_falls_back_to_static():
@@ -82,8 +82,8 @@ def test_torn_route_record_falls_back_to_static():
     router.install(5, 2)
     # corrupt one payload byte after the header: CRC must reject the record
     nvmm.store(pol.route_base + 16, b"\xff")
-    epoch, table = load_route_record(nvmm, pol)
-    assert (epoch, table) == (0, {})
+    epoch, table, shifts = load_route_record(nvmm, pol)
+    assert (epoch, table, shifts) == (0, {}, {})
     assert EpochRouter(nvmm, pol).route(5, 0) == 5 % pol.shards
 
 
@@ -104,7 +104,7 @@ def test_format_clears_route_record():
     NVLog(nvmm, pol, format=True)
     EpochRouter(nvmm, pol).install(0, 3)
     NVLog(nvmm, pol, format=True)            # reformat (recovery does this)
-    assert load_route_record(nvmm, pol) == (0, {})
+    assert load_route_record(nvmm, pol) == (0, {}, {})
 
 
 # ----------------------------------------------------------------- planning
@@ -405,3 +405,150 @@ def test_stale_migration_plan_for_retired_fdid_is_skipped():
         nv.close(fd2)
     finally:
         nv.shutdown()
+
+
+# ----------------------------------------------------- stripe width tuning
+def stripe_pol(**kw):
+    base = dict(shard_route="stripe", stripe_pages=4)   # 1 KiB stripes
+    base.update(kw)
+    return make_policy(**base)
+
+
+def feed_hot_stripes(router, sb, fdid=0, stripes=(0, 4), load=40):
+    """One epoch: ``stripes`` of ``fdid`` all hot (and, with a stride-4
+    pattern on 4 shards, all colliding on one shard), plus a light key per
+    other shard so cold targets exist."""
+    for s in stripes:
+        router.note_append(fdid, s * sb, load)
+    for other in (1, 2, 3):
+        router.note_append(other, 0, 1)
+
+
+def test_stripe_tuning_streak_emits_width_change():
+    pol = stripe_pol()
+    nvmm = NVMM(pol.nvmm_bytes)
+    NVLog(nvmm, pol, format=True)
+    router = EpochRouter(nvmm, pol)
+    sb = pol.stripe_bytes
+    # epochs 1 and 2: the planner proposes per-key moves (never installed,
+    # so the skew repeats) — no width change yet
+    for epoch in range(pol.stripe_tune_streak - 1):
+        feed_hot_stripes(router, sb)
+        plan = router.plan()
+        assert plan and all(m.new_shift is None for m in plan)
+        assert all(m.fdid == 0 for m in plan)
+    # epoch 3: the streak trips — ONE width change replaces every per-key
+    # move of the persistently hot fdid
+    feed_hot_stripes(router, sb)
+    plan = router.plan()
+    assert len(plan) == 1
+    mig = plan[0]
+    assert mig.fdid == 0 and mig.new_shift == 1
+    assert mig.old_sid == -1 and mig.new_sid == -1
+    # a successful widening resets the streak: the NEXT skewed epoch is
+    # back to per-key moves (at the new width)
+    router.install_width(0, 1)
+    feed_hot_stripes(router, sb)
+    assert all(m.new_shift is None for m in router.plan())
+
+
+def test_stripe_tuning_streak_resets_on_a_calm_epoch():
+    pol = stripe_pol()
+    nvmm = NVMM(pol.nvmm_bytes)
+    NVLog(nvmm, pol, format=True)
+    router = EpochRouter(nvmm, pol)
+    sb = pol.stripe_bytes
+    for epoch in range(pol.stripe_tune_streak - 1):
+        feed_hot_stripes(router, sb)
+        router.plan()
+    feed(router, {0: 5, 1: 5, 2: 5, 3: 5})   # balanced epoch: no moves
+    assert router.plan() == []
+    # the streak restarted — two more hot epochs still only per-key moves
+    for epoch in range(pol.stripe_tune_streak - 1):
+        feed_hot_stripes(router, sb)
+        assert all(m.new_shift is None for m in router.plan())
+
+
+def test_stripe_tuning_never_narrows_below_a_page():
+    pol = stripe_pol(stripe_pages=1)         # stripe == page: cannot halve
+    nvmm = NVMM(pol.nvmm_bytes)
+    NVLog(nvmm, pol, format=True)
+    router = EpochRouter(nvmm, pol)
+    sb = pol.stripe_bytes
+    for epoch in range(pol.stripe_tune_streak + 2):
+        feed_hot_stripes(router, sb)
+        assert all(m.new_shift is None for m in router.plan())
+
+
+def test_install_width_drops_overrides_and_persists():
+    pol = stripe_pol()
+    nvmm = NVMM(pol.nvmm_bytes)
+    NVLog(nvmm, pol, format=True)
+    router = EpochRouter(nvmm, pol)
+    sb = pol.stripe_bytes
+    k4 = router.key_of(0, 4 * sb)
+    router.install(k4, 2)                    # per-key override for fdid 0
+    k_other = router.key_of(7, 0)            # static route is shard 3:
+    router.install(k_other, 1)               # override to 1 for a bystander
+    assert router.install_width(0, 1)
+    # fdid 0 keys are gone (stale at the new width); the bystander stays
+    assert k4 not in router.table and k_other in router.table
+    assert router.stripe_bytes_of(0) == sb // 2
+    assert router.stripe_bytes_of(7) == sb
+    # the formula now spreads fdid 0 at half-stripe granularity
+    assert router.route(0, 0) != router.route(0, sb // 2)
+    # persisted: a fresh attach adopts epoch, table, and widths
+    epoch, table, shifts = load_route_record(nvmm, pol)
+    assert shifts == {0: 1} and table == {k_other: 1}
+    r2 = EpochRouter(nvmm, pol)
+    assert r2.stripe_bytes_of(0) == sb // 2
+    assert r2.route(0, sb // 2) == router.route(0, sb // 2)
+    # width 0 removes the entry again
+    assert router.install_width(0, 0)
+    assert router.stripe_bytes_of(0) == sb
+    assert load_route_record(nvmm, pol)[2] == {}
+
+
+def test_install_width_requires_stripe_mode():
+    pol = make_policy(shard_route="fdid")
+    nvmm = NVMM(pol.nvmm_bytes)
+    NVLog(nvmm, pol, format=True)
+    router = EpochRouter(nvmm, pol)
+    assert not router.install_width(0, 1)
+
+
+def test_stripe_widening_end_to_end():
+    """A persistently hot striped file gets its stripe width halved by the
+    live rebalancer instead of being chased stripe-by-stripe, and every
+    byte survives the width flip."""
+    pol = stripe_pol(log_entries=1024)
+    nv, tier = make_nv(pol)
+    try:
+        fds = [nv.open(f"/f{i}") for i in range(4)]
+        sb = pol.stripe_bytes
+        hot = [s * sb for s in range(0, 48, 4)]   # stride-4: all shard 0
+        ticks = 0
+        while nv.router.stats_stripe_widenings == 0 and ticks < 8:
+            for off in hot:
+                for rep in range(4):
+                    nv.pwrite(fds[0], bytes([1 + rep]) * 100, off + rep * 100)
+            for i in (1, 2, 3):
+                nv.pwrite(fds[i], b"x" * 50, 0)
+            nv.cleanup.rebalancer.tick()
+            ticks += 1
+        assert nv.router.stats_stripe_widenings >= 1
+        assert nv.router.stripe_bytes_of(nv._of(fds[0]).file.fdid) < sb
+        st = nv.stats()
+        assert st["route_stripe_widenings"] >= 1
+        # post-widening writes land and read back through the new formula
+        for off in hot:
+            nv.pwrite(fds[0], bytes([9]) * 100, off)
+        for off in hot:
+            assert nv.pread(fds[0], 100, off) == bytes([9]) * 100
+            assert nv.pread(fds[0], 100, off + 300) == bytes([4]) * 100
+        nv.flush()
+    finally:
+        nv.shutdown()
+    snap = tier.open("/f0").snapshot()
+    for off in hot:
+        assert snap[off:off + 100] == bytes([9]) * 100
