@@ -22,6 +22,7 @@ from __future__ import annotations
 import time
 
 from benchmarks.backends import make_stack
+from repro.core.policy import CACHELINE
 
 PAGE = 4096
 
@@ -48,6 +49,7 @@ def run_bytes_per_committed(n_pages: int = 32, passes: int = 8):
             st.nv.flush()                       # ...flips, refs drain
             tf = st.tier.open("/hot.dat")
             nvmm0 = st.nv.nvmm.stats_stored_bytes
+            s0 = st.nv.stats()
             backend0 = tf.stats_bytes
             committed = 0
             t0 = time.perf_counter()
@@ -62,6 +64,17 @@ def run_bytes_per_committed(n_pages: int = 32, passes: int = 8):
             nvmm_bytes = st.nv.nvmm.stats_stored_bytes - nvmm0
             backend_bytes = tf.stats_bytes - backend0
             persisted = nvmm_bytes + backend_bytes
+            pwbs = s["nvmm_pwbs"] - s0["nvmm_pwbs"]
+            flushed = CACHELINE * (s["nvmm_pwb_lines"] - s0["nvmm_pwb_lines"])
+            psyncs = s["nvmm_psyncs"] - s0["nvmm_psyncs"]
+            # reconcile the flush counters against the persisted-bytes
+            # figure: every NVMM-stored byte must be covered by a pwb
+            # (lower bound), and pwb traffic may exceed stores only by
+            # per-call partial-line rounding (upper bound) — a redundant
+            # or missing flush in a commit path moves one of these.
+            assert nvmm_bytes <= flushed <= nvmm_bytes + 2 * CACHELINE * pwbs, \
+                (mode, nvmm_bytes, flushed, pwbs)
+            assert psyncs > 0, "no durability points recorded"
             rows.append({
                 "mode": mode,
                 "committed_bytes": committed,
@@ -69,6 +82,10 @@ def run_bytes_per_committed(n_pages: int = 32, passes: int = 8):
                 "backend_bytes": backend_bytes,
                 "persisted_bytes": persisted,
                 "persisted_per_committed_byte": persisted / committed,
+                "nvmm_pwbs": pwbs,
+                "flushed_bytes": flushed,
+                "flushed_per_committed_byte": flushed / committed,
+                "nvmm_psyncs": psyncs,
                 "mode_migrations": s["mode_migrations"],
                 "paged_frame_writes": s["paged_frame_writes"],
                 "paged_writebacks": s["paged_writebacks"],

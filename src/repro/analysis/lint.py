@@ -1,0 +1,212 @@
+"""AST static pass over ``repro.core`` — ``python -m repro.analysis.lint``.
+
+Checks (source of truth for the hierarchy is the LOCK HIERARCHY table in
+``repro/core/locking.py``'s docstring, parsed at startup):
+
+* ``L001`` — every ``threading.Lock``/``RLock``/``Condition`` construction
+  in ``repro.core`` must go through the ``locking.make_*`` factories
+  (direct constructions are invisible to the runtime checker), and every
+  factory call must name a class present in the hierarchy table.
+* ``L002`` — no ``time.sleep`` and no backend I/O call (``pwrite``,
+  ``pwritev``, ``pread``, ``preadv``, ``fsync``) syntactically inside a
+  ``with <shard lock>`` block: the shard alloc lock serializes every
+  writer of that shard, so a device round-trip under it is a throughput
+  cliff.  Shard-lock attributes are discovered from
+  ``make_lock("shard")`` / ``make_condition("shard", ...)`` assignments.
+* ``L003`` — every ``<obj>.psync()`` call must be dominated by a
+  ``<obj>.pwb(...)`` (or ``store_flush``) on the same object earlier in
+  the enclosing function: a psync with nothing flushed persists nothing,
+  which almost always means the pwb is missing, not the psync redundant.
+  (Dominance is approximated by source order within the function —
+  sufficient for the straight-line persist protocols this codebase uses.)
+
+Suppress a finding by appending ``# lint: allow(CODE)`` to the flagged
+line.  Exit status: 0 when clean, 1 with findings (one per line:
+``path:line: CODE message``).
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+from typing import Dict, List, Set, Tuple
+
+from repro.core.locking import parse_hierarchy
+
+_FACTORIES = {"make_lock", "make_rlock", "make_condition"}
+_PRIMITIVES = {"Lock", "RLock", "Condition"}
+_IO_CALLS = {"pwrite", "pwritev", "pread", "preadv", "fsync"}
+
+
+class Finding:
+    def __init__(self, path: Path, line: int, code: str, msg: str):
+        self.path, self.line, self.code, self.msg = path, line, code, msg
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.msg}"
+
+
+def _factory_name(call: ast.Call) -> str:
+    f = call.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return ""
+
+
+def _is_threading_primitive(call: ast.Call) -> bool:
+    f = call.func
+    return (isinstance(f, ast.Attribute) and f.attr in _PRIMITIVES
+            and isinstance(f.value, ast.Name) and f.value.id == "threading")
+
+
+def _literal_class_arg(call: ast.Call):
+    if call.args and isinstance(call.args[0], ast.Constant) \
+            and isinstance(call.args[0].value, str):
+        return call.args[0].value
+    return None
+
+
+def collect_shard_attrs(trees: Dict[Path, ast.Module]) -> Set[str]:
+    """Attribute names assigned from ``make_lock("shard")`` /
+    ``make_condition("shard", ...)`` — the ``with`` targets L002 guards."""
+    attrs: Set[str] = set()
+    for tree in trees.values():
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Assign) or \
+                    not isinstance(node.value, ast.Call):
+                continue
+            call = node.value
+            if _factory_name(call) not in _FACTORIES:
+                continue
+            if _literal_class_arg(call) != "shard":
+                continue
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Attribute):
+                    attrs.add(tgt.attr)
+    return attrs
+
+
+def _suppressed(src_lines: List[str], line: int, code: str) -> bool:
+    if 0 < line <= len(src_lines):
+        return f"lint: allow({code})" in src_lines[line - 1]
+    return False
+
+
+def lint_file(path: Path, tree: ast.Module, hierarchy: Dict[str, dict],
+              shard_attrs: Set[str]) -> List[Finding]:
+    findings: List[Finding] = []
+    src_lines = path.read_text().splitlines()
+
+    def flag(node: ast.AST, code: str, msg: str) -> None:
+        if not _suppressed(src_lines, node.lineno, code):
+            findings.append(Finding(path, node.lineno, code, msg))
+
+    is_locking_mod = path.name == "locking.py"
+
+    # ---- L001: constructions + factory names ----------------------------
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module == "threading":
+            for alias in node.names:
+                if alias.name in _PRIMITIVES:
+                    flag(node, "L001",
+                         f"import of threading.{alias.name}: construct "
+                         f"locks via repro.core.locking.make_*")
+        if not isinstance(node, ast.Call):
+            continue
+        if _is_threading_primitive(node) and not is_locking_mod:
+            flag(node, "L001",
+                 f"direct threading.{node.func.attr}() in core/ — use "
+                 f"repro.core.locking.make_* so the hierarchy checker "
+                 f"sees it")
+        if _factory_name(node) in _FACTORIES and not is_locking_mod:
+            name = _literal_class_arg(node)
+            if name is None:
+                flag(node, "L001",
+                     "lock class name must be a string literal (the "
+                     "hierarchy table is static)")
+            elif name not in hierarchy:
+                flag(node, "L001",
+                     f"lock class {name!r} not in the hierarchy table "
+                     f"(core/locking.py docstring)")
+
+    # ---- L002: sleep / backend I/O under a shard lock -------------------
+    if shard_attrs:
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.With):
+                continue
+            if not any(isinstance(it.context_expr, ast.Attribute)
+                       and it.context_expr.attr in shard_attrs
+                       for it in node.items):
+                continue
+            for sub in ast.walk(node):
+                if sub is node or not isinstance(sub, ast.Call):
+                    continue
+                fn = sub.func
+                name = fn.attr if isinstance(fn, ast.Attribute) else (
+                    fn.id if isinstance(fn, ast.Name) else "")
+                if name == "sleep" or name in _IO_CALLS:
+                    flag(sub, "L002",
+                         f"{name}() syntactically inside a `with <shard "
+                         f"lock>` block — every writer of the shard "
+                         f"serializes behind it")
+
+    # ---- L003: psync dominated by pwb on the same object ----------------
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        calls: List[Tuple[int, str, str]] = []   # (line, obj, method)
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.Call) and \
+                    isinstance(sub.func, ast.Attribute) and \
+                    sub.func.attr in ("psync", "pwb", "store_flush"):
+                calls.append((sub.lineno, ast.unparse(sub.func.value),
+                              sub.func.attr))
+        for line, obj, meth in calls:
+            if meth != "psync":
+                continue
+            if obj == "self" and fn.name in ("psync", "pfence"):
+                continue                  # the primitive's own definition
+            if not any(l < line and o == obj and m in ("pwb", "store_flush")
+                       for l, o, m in calls):
+                flag_node = ast.Expr(lineno=line)  # carries the lineno only
+                flag(flag_node, "L003",
+                     f"{obj}.psync() not dominated by a {obj}.pwb() in "
+                     f"{fn.name}() — nothing was flush-requested here")
+
+    return findings
+
+
+def run(paths: List[Path]) -> List[Finding]:
+    hierarchy = parse_hierarchy()
+    files: List[Path] = []
+    for p in paths:
+        files.extend(sorted(p.rglob("*.py")) if p.is_dir() else [p])
+    trees = {f: ast.parse(f.read_text()) for f in files}
+    shard_attrs = collect_shard_attrs(trees)
+    findings: List[Finding] = []
+    for f, tree in trees.items():
+        findings.extend(lint_file(f, tree, hierarchy, shard_attrs))
+    return findings
+
+
+def main(argv: List[str]) -> int:
+    import repro.core as core
+    default = Path(core.__file__).parent
+    paths = [Path(a) for a in argv] or [default]
+    findings = run(paths)
+    for f in findings:
+        print(f)
+    if findings:
+        print(f"lint: {len(findings)} finding(s)")
+        return 1
+    nfiles = sum(len(list(p.rglob('*.py'))) if p.is_dir() else 1
+                 for p in paths)
+    print(f"lint: OK ({nfiles} files, hierarchy classes: "
+          f"{len(parse_hierarchy())})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -28,6 +28,7 @@ import threading
 import time
 from typing import Dict, Optional
 
+from repro.core import locking
 from repro.core.cleanup import CleanupPool
 from repro.core.log import (META_NO_FDID, MOP_CREATE, MOP_FTRUNCATE,
                             MOP_RENAME, MOP_UNLINK, NVLog)
@@ -61,11 +62,11 @@ class File:
         self.size = backend.size()
         self.hwm = self.size      # committed high-water mark: size minus any
         #                           not-yet-committed O_APPEND reservation
-        self.size_lock = threading.Lock()
+        self.size_lock = locking.make_lock("leaf:size")
         self.refs = 0
         self.pending = AtomicInt(0)              # log entries not yet drained
         self.shards_touched: set = set()         # sids holding entries for us
-        self._drained = threading.Condition()
+        self._drained = locking.make_condition("leaf:drained")
         self.ra_next = -1                        # readahead stream detector:
         #   the page a sequential miss stream would miss next; racy by
         #   design (a heuristic, like the kernel's per-file ra window)
@@ -90,7 +91,7 @@ class File:
         # route lookup and exit after the log append, so a migration can
         # freeze the file and know no in-flight write still holds a stale
         # route (see core/router.py's ordering proof)
-        self._route_cv = threading.Condition()
+        self._route_cv = locking.make_condition("route_gate")
         self.route_inflight = 0
         self.route_frozen = False
 
@@ -149,7 +150,7 @@ class OpenFile:
         self.file = file
         self.flags = flags
         self.cursor = 0
-        self.cursor_lock = threading.Lock()
+        self.cursor_lock = locking.make_lock("leaf:cursor")
 
 
 class NVCache:
@@ -1322,6 +1323,10 @@ class NVCache:
             "drain_deferred": self.cleanup.stats_deferred,
             "drain_span_merges": self.cleanup.stats_span_merges,
             "nvmm_psyncs": self.nvmm.stats_psync,
+            "nvmm_pwbs": self.nvmm.stats_pwb,
+            "nvmm_pwb_lines": self.nvmm.stats_pwb_lines,
+            "nvmm_fences": self.nvmm.stats_fence,
+            "nvmm_stored_bytes": self.nvmm.stats_stored_bytes,
             "alloc_wait_s": sum(sh.stats_alloc_wait_s
                                 for sh in self.log.shards),
             "route_epoch": self.router.epoch if self.router else 0,

@@ -52,6 +52,7 @@ import time
 from typing import Callable, Iterable, Optional
 
 from repro.core import drain as _drain
+from repro.core import locking
 from repro.core.drain import FsyncEpochScheduler
 from repro.core.log import CG_HEAD, META_FDID, LogShard, NVLog
 
@@ -80,7 +81,7 @@ class CleanupThread(threading.Thread):
         # ^ test-only: called at every plan/apply checkpoint (tag), may set
         #   hard_stop to simulate power loss at that exact drain point
         self._drain_count = 0                 # nested drain requests
-        self._drain_lock = threading.Lock()
+        self._drain_lock = locking.make_lock("leaf:drain_gate")
         # batch-spanning coalescing: the carried (deferred, unconsumed)
         # tail-extent entries of the previous batch, their oldest log index
         # (the identity of the open extent) and when they were first carried

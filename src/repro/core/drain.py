@@ -39,6 +39,7 @@ from __future__ import annotations
 import threading
 from typing import Callable, Dict, List, Optional
 
+from repro.core import locking
 from repro.core.log import CG_HEAD, META_FDID, LogShard
 from repro.core.policy import Policy
 
@@ -406,7 +407,7 @@ class _SyncState:
     __slots__ = ("cond", "running", "started", "done", "waiters", "errors")
 
     def __init__(self):
-        self.cond = threading.Condition()
+        self.cond = locking.make_condition("leaf:fsync_epoch")
         self.running = False
         self.started = 0              # epochs started
         self.done = 0                 # epochs completed (success OR failure)
@@ -428,7 +429,7 @@ class FsyncEpochScheduler:
 
     def __init__(self, enabled: bool = True):
         self.enabled = enabled
-        self._lock = threading.Lock()
+        self._lock = locking.make_lock("leaf:fsync_sched")
         self._state: Dict[int, _SyncState] = {}   # id(backend) -> state
         self.stats_requests = 0
         self.stats_issued = 0

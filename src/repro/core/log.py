@@ -73,6 +73,7 @@ import time
 import zlib
 from typing import Iterator, List, Optional
 
+from repro.core import locking
 from repro.core.nvmm import NVMM
 from repro.core.policy import Policy, SUPERBLOCK
 
@@ -200,9 +201,11 @@ class LogShard:
         self.base = policy.shard_base(sid)
         self.tail_off = policy.shard_tail_off(sid)
 
-        self._lock = threading.Lock()           # guards head/volatile_tail
-        self._space = threading.Condition(self._lock)   # writers wait for space
-        self._committed = threading.Condition(self._lock)  # drainer waits for work
+        self._lock = locking.make_lock("shard")  # guards head/volatile_tail
+        self._space = locking.make_condition("shard", self._lock)
+        #                                       ^ writers wait for space
+        self._committed = locking.make_condition("shard", self._lock)
+        #                                       ^ drainer waits for work
         self.head = 0                           # volatile head (paper §II-B fn1)
         self.volatile_tail = 0
         self.stats_appended = 0                 # entries ever reserved here
@@ -497,7 +500,7 @@ class NVLog:
             raise ValueError(f"NVMM region too small: {nvmm.size} < {policy.nvmm_bytes}")
         self.shards: List[LogShard] = [LogShard(nvmm, policy, s)
                                        for s in range(policy.shards)]
-        self._seq_lock = threading.Lock()
+        self._seq_lock = locking.make_lock("leaf:seq")
         self._seq = 0
         self.stats_full_scans = 0   # whole-log scans (must stay off hot paths)
         self.router = None          # optional EpochRouter (adaptive routing);

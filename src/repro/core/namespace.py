@@ -79,6 +79,7 @@ import collections
 import threading
 from typing import Dict, List, Optional, Set, Tuple
 
+from repro.core import locking
 from repro.core.log import (MOP_CREATE, MOP_FTRUNCATE, MOP_RENAME,
                             MOP_UNLINK, NVLog, encode_meta)
 
@@ -103,17 +104,17 @@ class Namespace:
     def __init__(self, log: NVLog, tier, fd_max: int):
         self.log = log
         self.tier = tier
-        self.lock = threading.Lock()
+        self.lock = locking.make_lock("meta")
         self.files: Dict[str, object] = {}       # path -> api.File
         self.by_fdid: Dict[int, object] = {}
         self.fdid_free: List[int] = list(range(fd_max - 1, -1, -1))
         self._unapplied: Set[Tuple[int, int]] = set()  # {(sid, idx)}
         self._live: Set[Tuple[int, int]] = set()       # journaled, not yet
         #                                                consumed by the drain
-        self._ua_lock = threading.Lock()
-        self._consumed = threading.Condition(self._ua_lock)
+        self._ua_lock = locking.make_lock("leaf:ns_unapplied")
+        self._consumed = locking.make_condition("leaf:ns_unapplied", self._ua_lock)
         self._deferred = collections.deque()      # (seq, fn, marks) FIFO
-        self._apply_lock = threading.Lock()       # serializes appliers
+        self._apply_lock = locking.make_lock("leaf:ns_apply")  # serializes appliers
         self.stats_meta_ops = {"create": 0, "rename": 0, "unlink": 0,
                                "ftruncate": 0}
         self.stats_meta_entries = 0               # log entries appended

@@ -69,6 +69,7 @@ class NVMM:
         self._dirty: set[int] = set()        # dirty line indices
         self._requested: set[int] = set()    # pwb'd but not yet fenced
         self.stats_pwb = 0
+        self.stats_pwb_lines = 0             # cachelines covered by pwb calls
         self.stats_fence = 0
         self.stats_psync = 0
         self.stats_stored_bytes = 0
@@ -94,6 +95,8 @@ class NVMM:
     def pwb(self, off: int, n: int = CACHELINE) -> None:
         """Request flush of the cachelines covering ``[off, off+n)``."""
         self.stats_pwb += 1
+        self.stats_pwb_lines += \
+            (off + max(n, 1) - 1) // CACHELINE - off // CACHELINE + 1
         if self.track:
             lines = range(off // CACHELINE, (off + n - 1) // CACHELINE + 1)
             self._requested.update(l for l in lines if l in self._dirty)
@@ -111,12 +114,20 @@ class NVMM:
     def _drain_requested(self) -> None:
         if not self.track:
             return
-        for line in self._requested:
+        # pop-drain rather than iterate: concurrent pwb() calls (writer vs
+        # cleanup threads share the region) mutate the set mid-fence, and
+        # iterating a set while another thread updates it raises.  Draining
+        # a line requested *during* the fence is benign — fences guarantee
+        # at-least the lines requested before them.
+        while self._requested:
+            try:
+                line = self._requested.pop()
+            except KeyError:
+                break
             b = line * CACHELINE
             e = min(b + CACHELINE, self.size)
             self._durable[b:e] = self._buf[b:e]
             self._dirty.discard(line)
-        self._requested.clear()
 
     # -- crash simulation ----------------------------------------------------
     def crash(self, choose_evicted: Optional[Callable[[Iterable[int]], Iterable[int]]] = None) -> None:

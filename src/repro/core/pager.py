@@ -54,6 +54,7 @@ import threading
 import zlib
 from typing import Dict, Iterator, List, Optional, Tuple
 
+from repro.core import locking
 from repro.core.nvmm import NVMM
 from repro.core.policy import FRAME_HDR, Policy
 
@@ -111,7 +112,7 @@ class PagedRegion:
         self.policy = policy
         self.page_size = policy.page_size
         self.seq_source = seq_source          # NVLog.next_seq
-        self.lock = threading.Lock()
+        self.lock = locking.make_lock("pager_free")
         self.free: List[int] = list(range(policy.page_frames - 1, -1, -1))
         self.dirty: Dict[int, int] = {}       # idx -> dirty tick (FIFO age)
         self.owner: Dict[int, Tuple[int, int]] = {}  # idx -> (fdid, page_no)

@@ -24,13 +24,15 @@ import threading
 from collections import deque
 from typing import Optional
 
+from repro.core import locking
+
 
 class AtomicInt:
     __slots__ = ("_v", "_lock")
 
     def __init__(self, v: int = 0):
         self._v = v
-        self._lock = threading.Lock()
+        self._lock = locking.make_lock("leaf:atomic_int")
 
     def inc(self, d: int = 1) -> int:
         with self._lock:
@@ -73,9 +75,13 @@ class PageDesc:
 
     def __init__(self, page_no: int):
         self.page_no = page_no
-        self.atomic_lock = threading.Lock()    # write/read atomicity (§II-D)
-        self.cleanup_lock = threading.Lock()   # vs cleanup thread (§II-D)
-        self.ref_lock = threading.Lock()       # writer append vs drain retire
+        # write/read atomicity (§II-D); ascending page order when stacked
+        self.atomic_lock = locking.make_lock("page_atomic", order_key=page_no)
+        # vs cleanup thread (§II-D); ascending page order when stacked
+        self.cleanup_lock = locking.make_lock("page_cleanup",
+                                              order_key=page_no)
+        # writer append vs drain retire
+        self.ref_lock = locking.make_lock("leaf:ref")
         self.entries: list = []                # live EntryRefs, seq order
         self.content: Optional[PageContent] = None
         self.accessed = False
@@ -122,7 +128,7 @@ class RadixTree:
     def __init__(self):
         self._root: list = [None] * self.FANOUT
         self._height = 1                     # levels below root
-        self._insert_lock = threading.Lock()
+        self._insert_lock = locking.make_lock("leaf:radix")
 
     def _capacity_bits(self) -> int:
         return self.FANOUT_BITS * self._height
@@ -193,7 +199,7 @@ class LRUCache:
         self.capacity = max(2, capacity)
         self.page_size = page_size
         self._queue: deque[PageContent] = deque()
-        self._lock = threading.Lock()          # the paper's "LRU lock"
+        self._lock = locking.make_lock("leaf:lru")   # the paper's "LRU lock"
         self._allocated = 0
         self.stats_evictions = 0
         self.stats_hits = 0

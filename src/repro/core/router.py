@@ -90,6 +90,7 @@ import threading
 import zlib
 from typing import Dict, List, Optional, Tuple
 
+from repro.core import locking
 from repro.core.nvmm import NVMM
 from repro.core.policy import Policy, ROUTE_ENT, ROUTE_HDR
 
@@ -185,7 +186,7 @@ class EpochRouter:
         self.nvmm = nvmm
         self.policy = policy
         self.sampling = sampling
-        self._lock = threading.Lock()          # installs + counters
+        self._lock = locking.make_lock("leaf:router")  # installs + counters
         self.epoch = 0
         self.table: Dict[int, int] = {}        # key -> sid (immutable; swapped)
         self._key_load: Dict[int, int] = {}    # entries appended this epoch

@@ -1,19 +1,60 @@
-"""Shared pytest configuration: the `slow` marker and its opt-in flag.
+"""Shared pytest configuration: the `slow` marker, the full-scan guard,
+and the `--sanitize` mode.
 
 Slow tests (multi-minute pjit / pipeline runs) are skipped by default and
 enabled with ``--runslow``; CI runs the default (fast) selection.
+
+The **full-scan guard** is always on: every :class:`repro.core.log.NVLog`
+built during the session is registered, and any test across which the
+total ``stats_full_scans`` grew fails — the read/drain paths must never
+regress to whole-log scans (``scan_all_committed`` is recovery/diagnostic
+only).  This replaces the ``assert nv.log.stats_full_scans == 0`` lines
+that used to be scattered through the test files.  A test that scans on
+purpose opts out with ``@pytest.mark.full_scan_ok``.
+
+``--sanitize`` additionally arms the runtime checkers in
+:mod:`repro.analysis` before any engine object is constructed: every NVMM
+gets a persistence-ordering shadow (pmcheck) and every registered lock a
+hierarchy tracer (lockcheck).  The autouse fixture below fails any test
+that accumulated a violation — the checkers record instead of raise,
+because raising inside a drain thread would hang the pool.
 """
+import weakref
+
 import pytest
+
+_nvlog_refs = []
 
 
 def pytest_addoption(parser):
     parser.addoption("--runslow", action="store_true", default=False,
                      help="also run tests marked @pytest.mark.slow")
+    parser.addoption("--sanitize", action="store_true", default=False,
+                     help="run under the persistence-ordering and "
+                          "lock-hierarchy sanitizers (repro.analysis)")
 
 
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: long-running test, excluded by default (use --runslow)")
+    config.addinivalue_line(
+        "markers", "full_scan_ok: test intentionally performs a full log "
+                   "scan (exempt from the full-scan guard)")
+    if config.getoption("--sanitize"):
+        from repro.analysis import sanitize
+        sanitize.install()
+    # always-on full-scan guard bookkeeping (composes with the sanitize
+    # patch of NVLog.__init__: this wraps whatever is currently installed)
+    from repro.core.log import NVLog
+    if not getattr(NVLog.__init__, "_full_scan_guard", False):
+        orig_init = NVLog.__init__
+
+        def init(self, *a, **kw):
+            orig_init(self, *a, **kw)
+            _nvlog_refs.append(weakref.ref(self))
+
+        init._full_scan_guard = True
+        NVLog.__init__ = init
 
 
 def pytest_collection_modifyitems(config, items):
@@ -23,3 +64,35 @@ def pytest_collection_modifyitems(config, items):
     for item in items:
         if "slow" in item.keywords:
             item.add_marker(skip_slow)
+
+
+def _total_full_scans() -> int:
+    alive = [r() for r in _nvlog_refs]
+    if len(alive) > 64 and None in alive:       # prune dead refs
+        _nvlog_refs[:] = [r for r in _nvlog_refs if r() is not None]
+    return sum(log.stats_full_scans for log in alive if log is not None)
+
+
+@pytest.fixture(autouse=True)
+def _sanitize_guard(request):
+    """Fail any test that performed a full log scan (always), plus any
+    test that accumulated a sanitizer violation (under --sanitize)."""
+    base_scans = _total_full_scans()
+    st = None
+    if request.config.getoption("--sanitize"):
+        from repro.analysis import sanitize
+        st = sanitize.state_or_none()
+        st.begin_test()
+    yield
+    # the global delta below owns FS001 reporting in-process
+    errors = [] if st is None else st.end_test(allow_full_scan=True)
+    if "full_scan_ok" not in request.keywords:
+        delta = _total_full_scans() - base_scans
+        if delta > 0:
+            errors.append(
+                f"FS001: {delta} full log scan(s) during this test "
+                f"(scan_all_committed is recovery/diagnostic-only; mark "
+                f"the test full_scan_ok if intentional)")
+    if errors:
+        pytest.fail("sanitizer violations:\n  " + "\n  ".join(errors),
+                    pytrace=False)
