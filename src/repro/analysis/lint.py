@@ -19,6 +19,19 @@ Checks (source of truth for the hierarchy is the LOCK HIERARCHY table in
   which almost always means the pwb is missing, not the psync redundant.
   (Dominance is approximated by source order within the function —
   sufficient for the straight-line persist protocols this codebase uses.)
+* ``L004`` — a field declared in a class's ``GUARDED_BY`` table (see the
+  GUARDED-BY CONTRACT in ``core/locking.py``) accessed as ``self.<field>``
+  outside a ``with self.<its guard>`` block.  ``__init__``/``__new__``,
+  ``*_locked``-suffixed methods (the callers-hold-it convention), and
+  nested function/lambda bodies are exempt; ``"write:lock"`` specs are
+  checked on writes only; ``None``/``"volatile"`` specs are not checked.
+  (Syntactic approximation: accesses through aliases or explicit
+  acquire/release pairs need an allow comment.)
+* ``L005`` — a lock-owning class (one that builds a lock via the
+  ``make_*`` factories) rebinds a *public* ``self.<attr>`` outside
+  ``__init__`` with no ``GUARDED_BY`` declaration for it: mutable shared
+  state the race detector cannot see.  Annotation completeness — the
+  guarded-by table's version of the hierarchy-table L001 rule.
 
 Suppress a finding by appending ``# lint: allow(CODE)`` to the flagged
 line.  Exit status: 0 when clean, 1 with findings (one per line:
@@ -92,6 +105,68 @@ def _suppressed(src_lines: List[str], line: int, code: str) -> bool:
     if 0 < line <= len(src_lines):
         return f"lint: allow({code})" in src_lines[line - 1]
     return False
+
+
+# ------------------------------------------------------- guarded-by helpers
+
+def _self_attr(node) -> bool:
+    return (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name) and node.value.id == "self")
+
+
+def _eval_spec(v):
+    """Best-effort static value of one GUARDED_BY entry."""
+    if isinstance(v, ast.Constant):
+        return v.value                    # str or None
+    if isinstance(v, ast.Tuple):
+        return tuple(e.value for e in v.elts
+                     if isinstance(e, ast.Constant))
+    if isinstance(v, ast.Attribute) and v.attr == "VOLATILE":
+        return "volatile"
+    if isinstance(v, ast.Name) and v.id == "VOLATILE":
+        return "volatile"
+    return None                           # unknown: treat as HB-only
+
+
+def _guarded_table(cls_node: ast.ClassDef):
+    """The class's ``GUARDED_BY`` dict, statically evaluated; None when
+    the class declares none."""
+    for stmt in cls_node.body:
+        if not isinstance(stmt, ast.Assign):
+            continue
+        for tgt in stmt.targets:
+            if isinstance(tgt, ast.Name) and tgt.id == "GUARDED_BY" \
+                    and isinstance(stmt.value, ast.Dict):
+                out = {}
+                for k, v in zip(stmt.value.keys, stmt.value.values):
+                    if isinstance(k, ast.Constant) and \
+                            isinstance(k.value, str):
+                        out[k.value] = _eval_spec(v)
+                return out
+    return None
+
+
+def _owns_lock(cls_node: ast.ClassDef) -> bool:
+    for node in ast.walk(cls_node):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call) \
+                and _factory_name(node.value) in _FACTORIES \
+                and any(_self_attr(t) for t in node.targets):
+            return True
+    return False
+
+
+def _required_guards(spec, is_write: bool):
+    """The set of ``self.<attr>`` guard names satisfying the spec for this
+    access, or None when the access is unchecked."""
+    if spec is None or spec == "volatile":
+        return None
+    if isinstance(spec, str):
+        if spec.startswith("write:"):
+            return {spec[len("write:"):]} if is_write else None
+        return {spec}
+    if isinstance(spec, tuple):
+        return set(spec)
+    return None
 
 
 def lint_file(path: Path, tree: ast.Module, hierarchy: Dict[str, dict],
@@ -175,7 +250,88 @@ def lint_file(path: Path, tree: ast.Module, hierarchy: Dict[str, dict],
                      f"{obj}.psync() not dominated by a {obj}.pwb() in "
                      f"{fn.name}() — nothing was flush-requested here")
 
+    # ---- L004/L005: the guarded-by contract -----------------------------
+    for cls_node in ast.walk(tree):
+        if not isinstance(cls_node, ast.ClassDef):
+            continue
+        table = _guarded_table(cls_node)
+        if table:
+            _check_l004(cls_node, table, flag)
+        if _owns_lock(cls_node):
+            _check_l005(cls_node, table or {}, flag)
+
     return findings
+
+
+def _check_l004(cls_node: ast.ClassDef, table: dict, flag) -> None:
+    """Guarded ``self.<field>`` accesses must sit inside a
+    ``with self.<guard>`` block."""
+
+    def with_guards(node: ast.With):
+        names = set()
+        for it in node.items:
+            if _self_attr(it.context_expr):
+                names.add(it.context_expr.attr)
+        return names
+
+    def visit(node, held):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            return                        # nested defs run elsewhere
+        if isinstance(node, ast.With):
+            held = held | with_guards(node)
+        elif _self_attr(node) and node.attr in table:
+            is_write = isinstance(node.ctx, (ast.Store, ast.Del))
+            req = _required_guards(table[node.attr], is_write)
+            if req is not None and not (req & held):
+                want = "|".join(sorted(req))
+                flag(node, "L004",
+                     f"{cls_node.name}.{node.attr} "
+                     f"{'written' if is_write else 'read'} outside "
+                     f"`with self.{want}` (its GUARDED_BY declaration)")
+        for child in ast.iter_child_nodes(node):
+            visit(child, held)
+
+    for meth in cls_node.body:
+        if not isinstance(meth, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if meth.name in ("__init__", "__new__") or \
+                meth.name.endswith("_locked"):
+            continue
+        for stmt in meth.body:
+            visit(stmt, set())
+
+
+def _check_l005(cls_node: ast.ClassDef, table: dict, flag) -> None:
+    """Public attrs rebound outside __init__ need a GUARDED_BY entry."""
+    seen: Set[str] = set()
+    for meth in cls_node.body:
+        if not isinstance(meth, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if meth.name in ("__init__", "__new__"):
+            continue
+        for node in ast.walk(meth):
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, (ast.AugAssign,)):
+                targets = [node.target]
+            else:
+                continue
+            if isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Call) and \
+                    _factory_name(node.value) in _FACTORIES:
+                continue                  # the lock itself
+            for tgt in targets:
+                if not _self_attr(tgt):
+                    continue
+                attr = tgt.attr
+                if attr.startswith("_") or attr in table or attr in seen:
+                    continue
+                seen.add(attr)
+                flag(tgt, "L005",
+                     f"public mutable attribute {cls_node.name}.{attr} "
+                     f"assigned outside __init__ with no GUARDED_BY "
+                     f"declaration — the race detector cannot check it")
 
 
 def run(paths: List[Path]) -> List[Finding]:

@@ -26,14 +26,21 @@ Non-blocking (try-lock) acquisitions are exempt from LC001/LC002 and do
 not feed the cycle graph — they cannot deadlock — but a successful one
 still counts as held for LC004.
 
-Violations are deduplicated by (code, lock classes, site) so a sweep
-reports each distinct pattern once.
+Violations are :class:`repro.analysis.trace.Violation` records,
+deduplicated by (code, lock classes, site) so a sweep reports each
+distinct pattern once.
+
+When a :class:`repro.analysis.racecheck.RaceCheck` is attached
+(``tracer.race``), every acquire/release of a TracedLock is forwarded to
+it — the happens-before edges of the vector-clock analysis — and the
+tracer's per-thread held stack doubles as the lockset.
 """
 from __future__ import annotations
 
 import threading
 from typing import Dict, List, Optional, Set, Tuple
 
+from repro.analysis.trace import Reporter, tid, tname
 from repro.core.locking import LEAF_LEVEL
 
 
@@ -54,7 +61,7 @@ class TracedLock:
         self._count = 0
 
     def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
-        me = threading.get_ident()
+        me = tid()
         if self._rlock and self._owner == me:
             self._inner.acquire(blocking, timeout)
             self._count += 1
@@ -95,7 +102,7 @@ class TracedLock:
     # on an RLock-backed wrapper, so notify() would wrongly conclude the
     # lock is un-owned and raise.
     def _is_owned(self) -> bool:
-        return self._owner == threading.get_ident()
+        return self._owner == tid()
 
     def _release_save(self):
         count = self._count if self._rlock else 1
@@ -109,7 +116,7 @@ class TracedLock:
     def _acquire_restore(self, count) -> None:
         for _ in range(count):
             self._inner.acquire()
-        self._owner = threading.get_ident()
+        self._owner = tid()
         self._count = count
         self._tracer.note_acquired(self)
 
@@ -124,10 +131,11 @@ class LockTracer:
     def __init__(self):
         self._tls = threading.local()
         self._mu = threading.Lock()
-        self.violations: List[str] = []
-        self._seen: Set[Tuple] = set()
+        self._rep = Reporter()
+        self.violations = self._rep.violations
         self.edges: Dict[Tuple[str, str], str] = {}
         self.stats_acquisitions = 0
+        self.race = None                  # optional RaceCheck (HB edges)
 
     # factory used by repro.core.locking
     def traced_lock(self, name: str, info: dict, order_key=None, group=None,
@@ -142,23 +150,23 @@ class LockTracer:
             held = self._tls.held = []
         return held
 
+    def held_locks(self) -> List[TracedLock]:
+        """The calling thread's current lockset (racecheck reads this)."""
+        return self._held()
+
     def _flag(self, code: str, key: Tuple, msg: str) -> None:
-        with self._mu:
-            if (code,) + key in self._seen:
-                return
-            self._seen.add((code,) + key)
-            self.violations.append(f"{code}: {msg}")
+        self._rep.flag(code, msg, key=(code,) + key)
 
     # --------------------------------------------------------------- checks
     def before_blocking_acquire(self, lock: TracedLock) -> None:
         held = self._held()
         if not held:
             return
-        tname = threading.current_thread().name
+        me = tname()
         with self._mu:
             for h in held:
                 if h.name != lock.name or not lock.multi:
-                    self.edges.setdefault((h.name, lock.name), tname)
+                    self.edges.setdefault((h.name, lock.name), me)
         if lock.level >= LEAF_LEVEL:
             return                        # leaves: edges only, no level rule
         ordered = [h for h in held if h.level < LEAF_LEVEL]
@@ -173,21 +181,25 @@ class LockTracer:
             if same and lock.order_key is not None:
                 prev = same[-1].order_key
                 if prev is not None and not (lock.order_key > prev):
-                    self._flag("LC002", (lock.name, tname),
-                               f"[{tname}] {lock.name} stacked with "
+                    self._flag("LC002", (lock.name, me),
+                               f"[{me}] {lock.name} stacked with "
                                f"non-increasing order key {lock.order_key!r} "
                                f"after {prev!r}")
             return
-        self._flag("LC001", (lock.name, top.name, tname),
-                   f"[{tname}] blocking acquire of {lock!r} while holding "
+        self._flag("LC001", (lock.name, top.name, me),
+                   f"[{me}] blocking acquire of {lock!r} while holding "
                    f"{top!r} (levels must strictly increase; held: "
                    f"{[h.name for h in held]})")
 
     def note_acquired(self, lock: TracedLock) -> None:
         self._held().append(lock)
         self.stats_acquisitions += 1
+        if self.race is not None:
+            self.race.on_acquire(lock)
 
     def note_released(self, lock: TracedLock) -> None:
+        if self.race is not None:
+            self.race.on_release(lock)
         held = self._held()
         for i in range(len(held) - 1, -1, -1):
             if held[i] is lock:
@@ -198,9 +210,9 @@ class LockTracer:
     def on_backend_io(self, kind: str, detail: str = "") -> None:
         held = [h.name for h in self._held()]
         if "shard" in held:
-            tname = threading.current_thread().name
-            self._flag("LC004", (kind, tname),
-                       f"[{tname}] backend {kind} {detail} issued while "
+            me = tname()
+            self._flag("LC004", (kind, me),
+                       f"[{me}] backend {kind} {detail} issued while "
                        f"holding a shard alloc lock (held: {held})")
 
     # --------------------------------------------------------------- cycles
@@ -237,7 +249,7 @@ class LockTracer:
 
     def summary(self) -> dict:
         return {
-            "violations": list(self.violations),
+            "violations": [str(v) for v in self.violations],
             "acquisitions": self.stats_acquisitions,
             "edges": sorted(f"{a}->{b}" for a, b in self.edges),
         }

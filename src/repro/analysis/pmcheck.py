@@ -54,6 +54,7 @@ import struct
 import threading
 from typing import Dict, List, Optional, Set, Tuple
 
+from repro.analysis.trace import Reporter, Violation, tid
 from repro.core.policy import CACHELINE, FRAME_HDR, ROUTE_ENT, ROUTE_HDR, Policy
 
 _U64 = struct.Struct("<Q")
@@ -72,15 +73,9 @@ _DIRTY = 1
 _REQUESTED = 2
 
 
-class PMViolation:
-    __slots__ = ("code", "msg")
-
-    def __init__(self, code: str, msg: str):
-        self.code = code
-        self.msg = msg
-
-    def __repr__(self) -> str:
-        return f"{self.code}: {self.msg}"
+# violation records now come from the shared checker plumbing; the old
+# name stays importable for the planted-bug suite and external tooling
+PMViolation = Violation
 
 
 class _Window:
@@ -94,7 +89,7 @@ class _Window:
         self.commit_off = commit_off
         self.commit_len = commit_len
         self.covered = covered            # [(start, end)) byte ranges
-        self.owner = threading.get_ident()
+        self.owner = tid()
 
     @property
     def commit_line(self) -> int:
@@ -111,8 +106,9 @@ class PMCheck:
         self._mu = threading.Lock()       # analysis infra, not a core lock
         self._lines: Dict[int, int] = {}  # line -> _DIRTY | _REQUESTED
         self._windows: List[_Window] = []
-        self.violations: List[PMViolation] = []
-        self.allow: Set[str] = set(allow or ())
+        self._rep = Reporter(allow)       # shared sink (dedup by code+msg)
+        self.violations = self._rep.violations
+        self.allow = self._rep.allow
         self.diag_redundant_pwb = 0
         self.diag_empty_fence = 0
         self.stats_commits = 0
@@ -130,9 +126,7 @@ class PMCheck:
 
     # ------------------------------------------------------------- reports
     def _flag(self, code: str, msg: str) -> None:
-        if code in self.allow:
-            return
-        self.violations.append(PMViolation(code, msg))
+        self._rep.flag(code, msg)
 
     def reset(self) -> None:
         with self._mu:
@@ -146,6 +140,23 @@ class PMCheck:
             "diag_redundant_pwb": self.diag_redundant_pwb,
             "diag_empty_fence": self.diag_empty_fence,
         }
+
+    def __deepcopy__(self, memo):
+        """Deepcopying a shadowed NVMM (the crash-image snapshot idiom in
+        the recovery tests) gives the copy a *fresh* shadow: raw locks
+        don't survive ``copy.deepcopy``, and the copy's future stores are
+        not this shadow's to judge.  The copied image is a crashed one, so
+        starting all-durable is exactly right.  Under an active
+        ``--sanitize`` session the new shadow registers with it, keeping
+        the copy's violations visible to the per-test guard."""
+        nvmm = memo.get(id(self.nvmm), self.nvmm)
+        pm = PMCheck(nvmm, policy=self.policy, allow=set(self.allow))
+        memo[id(self)] = pm
+        from repro.analysis import sanitize
+        st = sanitize.state_or_none()
+        if st is not None:
+            st.pmchecks.append(pm)
+        return pm
 
     # ------------------------------------------------------ state helpers
     @staticmethod
@@ -204,7 +215,7 @@ class PMCheck:
     def on_store(self, off: int, data) -> None:
         """Called BEFORE the underlying store is applied."""
         n = len(data)
-        me = threading.get_ident()
+        me = tid()
         with self._mu:
             for w in self._windows:
                 # PM002 polices protocol order on the COMMITTING thread only:
@@ -247,7 +258,7 @@ class PMCheck:
                 self.diag_redundant_pwb += 1
 
     def on_fence(self, kind: str) -> None:
-        me = threading.get_ident()
+        me = tid()
         with self._mu:
             drained = {l for l, st in self._lines.items() if st == _REQUESTED}
             if not drained:

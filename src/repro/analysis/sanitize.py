@@ -14,7 +14,12 @@
   :class:`~repro.core.policy.Policy` into its shadow (commit-point
   detection needs the layout), and the backend
   :class:`repro.storage.tiers.TierFile` I/O entry points to feed
-  ``lockcheck``'s I/O-under-shard-lock rule.
+  ``lockcheck``'s I/O-under-shard-lock rule;
+* arms :mod:`repro.analysis.racecheck`: the ``GUARDED_BY``-declared
+  classes in ``repro.core`` are instrumented, thread/Event lifecycle
+  hooks installed, and a session-wide :class:`~repro.analysis.racecheck.
+  RaceCheck` attached to the lock tracer (lock edges feed its vector
+  clocks; its RC001–RC003 reports fail the test like any other).
 
 The pytest fixture in ``tests/conftest.py`` calls :func:`begin_test` /
 :func:`end_test` around every test and fails the test on any accumulated
@@ -24,8 +29,10 @@ from __future__ import annotations
 
 from typing import List, Optional
 
+from repro.analysis import racecheck
 from repro.analysis.lockcheck import LockTracer
 from repro.analysis.pmcheck import PMCheck
+from repro.analysis.racecheck import RaceCheck
 from repro.core.policy import CACHELINE
 
 _state: Optional["SanitizeState"] = None
@@ -34,16 +41,21 @@ _state: Optional["SanitizeState"] = None
 class SanitizeState:
     def __init__(self):
         self.tracer = LockTracer()
+        self.race = RaceCheck(self.tracer)
+        self.tracer.race = self.race
         self.pmchecks: List[PMCheck] = []   # created since begin_test()
         self.nvlogs: list = []              # NVLogs created since begin_test()
         self._lc_mark = 0
+        self._rc_mark = 0
         self._orig = {}
 
     # ------------------------------------------------------------ per-test
     def begin_test(self) -> None:
         self.pmchecks.clear()
         self.nvlogs.clear()
-        self._lc_mark = len(self.tracer.violations)
+        self._lc_mark = self.tracer._rep.mark()
+        self.race.begin_test()
+        self._rc_mark = self.race.rep.mark()
 
     def end_test(self, allow_full_scan: bool = False) -> List[str]:
         errors: List[str] = []
@@ -54,7 +66,8 @@ class SanitizeState:
         # deadlock even if no single run interleaves into it (LC003 dedups,
         # so an old cycle is reported once, at the test that closed it)
         self.tracer.check_cycles()
-        errors.extend(self.tracer.violations[self._lc_mark:])
+        errors.extend(str(v) for v in self.tracer._rep.since(self._lc_mark))
+        errors.extend(str(v) for v in self.race.rep.since(self._rc_mark))
         if not allow_full_scan:
             for log in self.nvlogs:
                 if log.stats_full_scans:
@@ -81,6 +94,11 @@ def install() -> SanitizeState:
 
     from repro.core import locking
     locking.set_tracer(st.tracer)
+
+    # ------------------------------------------------------ race detector
+    racecheck.install_core()
+    racecheck.install_thread_hooks()
+    racecheck.set_active(st.race)
 
     # ---------------------------------------------------- NVMM class hooks
     from repro.core.nvmm import NVMM
@@ -164,6 +182,9 @@ def uninstall() -> None:
     from repro.storage.tiers import TierFile
     o = _state._orig
     locking.set_tracer(None)
+    racecheck.set_active(None)
+    racecheck.uninstall_core()
+    racecheck.uninstall_thread_hooks()
     NVMM.__init__, NVMM.store, NVMM.pwb = o["init"], o["store"], o["pwb"]
     NVMM.pfence, NVMM.psync, NVMM.crash = o["pfence"], o["psync"], o["crash"]
     NVLog.__init__ = o["nvlog_init"]

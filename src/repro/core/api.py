@@ -52,7 +52,35 @@ class File:
                  "refs", "pending", "shards_touched", "_drained", "ra_next",
                  "ra_window", "hwm", "_route_cv", "route_inflight",
                  "route_frozen", "unlinked", "pmode", "clf", "frames",
-                 "skip_drain_fsync")
+                 "skip_drain_fsync", "__weakref__")
+
+    GUARDED_BY = {
+        # route-epoch gate: every touch is inside `with self._route_cv`
+        "route_inflight": "_route_cv", "route_frozen": "_route_cv",
+        # logical length and committed high-water mark
+        "size": "size_lock", "hwm": "size_lock",
+        # readahead stream detector: racy by design (a heuristic, like the
+        # kernel's per-file ra window — a lost update costs one prefetch)
+        "ra_next": locking.VOLATILE, "ra_window": locking.VOLATILE,
+        # refcount writes happen under NVCache._meta (another object's
+        # lock, not expressible here); the drain thread's lock-free
+        # `refs == 0` read is an opportunistic reap hint only — the
+        # authoritative check re-runs in _maybe_retire_locked under _meta
+        "refs": locking.VOLATILE,
+        # monotonic flags set under _meta / the truncate journal window,
+        # read lock-free on hot paths (stale False = one extra fsync)
+        "unlinked": locking.VOLATILE, "skip_drain_fsync": locking.VOLATILE,
+        # flips only inside a route_freeze window (writers excluded), so a
+        # lock-free read sees a value stable for the write it gates
+        "pmode": locking.VOLATILE,
+        # published once at first write-open, before any write reaches us
+        "clf": locking.VOLATILE,
+        # never rebound; entries mutated under the owning page's
+        # atomic_lock — a per-page guard is not one attribute
+        "frames": locking.VOLATILE,
+        # GIL-atomic set.add from writers; drain targeting reads via set()
+        "shards_touched": locking.VOLATILE,
+    }
 
     def __init__(self, path: str, fdid: int, backend):
         self.path = path
@@ -144,7 +172,9 @@ class File:
 class OpenFile:
     """Per-descriptor state (paper §III: the opened table / cursor)."""
 
-    __slots__ = ("file", "flags", "cursor", "cursor_lock")
+    __slots__ = ("file", "flags", "cursor", "cursor_lock", "__weakref__")
+
+    GUARDED_BY = {"cursor": "cursor_lock"}
 
     def __init__(self, file: File, flags: int):
         self.file = file
@@ -154,6 +184,17 @@ class OpenFile:
 
 
 class NVCache:
+    GUARDED_BY = {
+        # read/replay/migration counters bumped from every api thread;
+        # stats() folds them under the same lock for a coherent snapshot
+        "stats_mode_migrations": "_stats_lock",
+        "stats_dirty_misses": "_stats_lock",
+        "stats_replay_entries": "_stats_lock",
+        "stats_readahead_loads": "_stats_lock",
+        "stats_readahead_pages": "_stats_lock",
+        "stats_readahead_hits": "_stats_lock",
+    }
+
     def __init__(self, policy: Policy, tier, *, nvmm: Optional[NVMM] = None,
                  track_crashes: bool = False, recover: bool = True):
         self.policy = policy
@@ -203,6 +244,8 @@ class NVCache:
                                    writeback=self._writeback_pressure)
         self.cleanup.start()
         self._crashed = False
+        self._stats_lock = locking.make_lock("leaf:stats")
+        # guarded-by: _stats_lock — the NVCache-level counters below
         self.stats_mode_migrations = 0
         self.stats_dirty_misses = 0
         self.stats_replay_entries = 0   # refs inspected across dirty misses
@@ -300,7 +343,7 @@ class NVCache:
                     for g in list(self._by_fdid.values()):
                         if g.refs == 0:
                             self._maybe_retire_locked(g)
-                fdid = self.ns.alloc_fdid()
+                fdid = self.ns.alloc_fdid_locked()
                 marks = None
                 try:
                     self.log.fd_table_set(fdid, path)   # durable path for recovery
@@ -309,13 +352,13 @@ class NVCache:
                         # (WAL rule): a crash after this point re-creates
                         # the path from the log even if the kernel lost the
                         # directory update
-                        marks, mseq = self.ns.journal(MOP_CREATE, fdid, 0,
+                        marks, mseq = self.ns.journal_locked(MOP_CREATE, fdid, 0,
                                                       path)
                     backend = self.tier.open(path)
                     if created:
                         self.ns.note_backend_applied(mseq)
                 except BaseException:
-                    self.ns.free_fdid(fdid)             # nothing references it
+                    self.ns.free_fdid_locked(fdid)             # nothing references it
                     raise
                 finally:
                     if marks is not None:
@@ -323,7 +366,7 @@ class NVCache:
                 f = File(path, fdid, backend)
                 if self.pager is not None:
                     f.clf = StreamClassifier(self.policy)
-                self.ns.bind(path, f)
+                self.ns.bind_locked(path, f)
             if accmode != O_RDONLY and f.radix is None:
                 f.radix = RadixTree()               # read cache only for writers
             f.refs += 1
@@ -432,7 +475,7 @@ class NVCache:
                     if f.unlinked:            # raced an unlink: plain path
                         pass
                     else:
-                        marks, mseq = self.ns.journal(MOP_FTRUNCATE, f.fdid,
+                        marks, mseq = self.ns.journal_locked(MOP_FTRUNCATE, f.fdid,
                                                       0, f.path)
                 f.skip_drain_fsync = True
                 try:
@@ -453,7 +496,7 @@ class NVCache:
                         # needed — the file is gone after any crash)
                         marks = None
                     else:
-                        marks, mseq = self.ns.journal(MOP_FTRUNCATE, f.fdid,
+                        marks, mseq = self.ns.journal_locked(MOP_FTRUNCATE, f.fdid,
                                                       length, f.path)
             self._truncate_apply(f, length, marks, mseq if marks else 0)
         finally:
@@ -589,7 +632,8 @@ class NVCache:
                 # freed so subsequent log-mode writes re-own the pages
                 self._writeback_file_frames(f, free=True, do_fsync=True)
             f.pmode = to_paged
-            self.stats_mode_migrations += 1
+            with self._stats_lock:
+                self.stats_mode_migrations += 1
             return True
         except TimeoutError:
             return False
@@ -958,10 +1002,11 @@ class NVCache:
                 c = d.content
                 if c is not None:
                     if p != just_loaded:      # the retry after our own
-                        self.lru.stats_hits += 1   # miss load is not a hit
+                        self.lru.note_hit()        # miss load is not a hit
                         if d.prefetched:      # first demand-hit on a
                             d.prefetched = False   # readahead-loaded page
-                            self.stats_readahead_hits += 1
+                            with self._stats_lock:
+                                self.stats_readahead_hits += 1
                     d.accessed = True
                     pstart = p * ps
                     s = pos - pstart
@@ -1037,10 +1082,11 @@ class NVCache:
                 if id(d) not in needset:
                     d.atomic_lock.release()
             held = need
-            self.lru.stats_misses += 1
+            self.lru.note_miss()
             if len(need) > 1:
-                self.stats_readahead_loads += 1
-                self.stats_readahead_pages += len(need) - 1
+                with self._stats_lock:
+                    self.stats_readahead_loads += 1
+                    self.stats_readahead_pages += len(need) - 1
             bufs = self.lru.acquire_buffers(len(need))
             for d in need:                    # ascending, after atomic locks
                 d.cleanup_lock.acquire()
@@ -1112,8 +1158,9 @@ class NVCache:
             return
         ps = self.policy.page_size
         base = d.page_no * ps
-        self.stats_dirty_misses += 1
-        self.stats_replay_entries += len(refs)
+        with self._stats_lock:
+            self.stats_dirty_misses += 1
+            self.stats_replay_entries += len(refs)
         for ref in refs:
             edata = self.log.ref_payload(ref)
             s = max(ref.off, base)
@@ -1169,7 +1216,7 @@ class NVCache:
             f = self._files.get(path)
             if f is None and not self.tier.exists(path):
                 raise FileNotFoundError(path)
-            marks, mseq = self.ns.journal(
+            marks, mseq = self.ns.journal_locked(
                 MOP_UNLINK, f.fdid if f is not None else META_NO_FDID,
                 0, path)
             try:
@@ -1217,7 +1264,7 @@ class NVCache:
                     else (fn if (fn is not None and fn.pending.get() > 0)
                           else None)
                 if stale is None:
-                    marks, mseq = self.ns.journal(
+                    marks, mseq = self.ns.journal_locked(
                         MOP_RENAME,
                         fo.fdid if fo is not None else META_NO_FDID, 0,
                         old, new)
@@ -1299,20 +1346,38 @@ class NVCache:
 
     # ------------------------------------------------------------- stats
     def stats(self) -> dict:
+        """Aggregate counters, each group read as a locked snapshot.
+
+        The drain, pager-writeback and rebalance threads mutate most of
+        these concurrently; every multi-writer counter is copied under its
+        owning lock (the per-subsystem ``snapshot_stats`` helpers and this
+        instance's ``_stats_lock``) so the dict never exposes a torn or
+        mid-update view.  Single-writer thread counters (the cleanup pool
+        properties) are folded at read per their volatile contract."""
+        lru = self.lru.snapshot_stats()
+        pager = self.pager.snapshot_stats() if self.pager else {}
+        route = self.router.snapshot_stats() if self.router else {}
+        meta = self.ns.snapshot_stats()
+        with self._stats_lock:
+            dirty_misses = self.stats_dirty_misses
+            replay_entries = self.stats_replay_entries
+            ra_loads = self.stats_readahead_loads
+            ra_pages = self.stats_readahead_pages
+            ra_hits = self.stats_readahead_hits
+            mode_migrations = self.stats_mode_migrations
         return {
             "shards": self.policy.shards,
             "log_used": self.log.used_entries,
-            "dirty_misses": self.stats_dirty_misses,
-            "replay_entries": self.stats_replay_entries,
+            "dirty_misses": dirty_misses,
+            "replay_entries": replay_entries,
             "log_full_scans": self.log.stats_full_scans,
-            "lru_hits": self.lru.stats_hits,
-            "lru_misses": self.lru.stats_misses,
-            "lru_evictions": self.lru.stats_evictions,
-            "readahead_loads": self.stats_readahead_loads,
-            "readahead_pages": self.stats_readahead_pages,
-            "readahead_hits": self.stats_readahead_hits,
-            "readahead_hit_rate": self.stats_readahead_hits
-                / max(1, self.stats_readahead_pages),
+            "lru_hits": lru["hits"],
+            "lru_misses": lru["misses"],
+            "lru_evictions": lru["evictions"],
+            "readahead_loads": ra_loads,
+            "readahead_pages": ra_pages,
+            "readahead_hits": ra_hits,
+            "readahead_hit_rate": ra_hits / max(1, ra_pages),
             "cleanup_batches": self.cleanup.stats_batches,
             "cleanup_entries": self.cleanup.stats_entries,
             "cleanup_fsyncs": self.cleanup.stats_fsyncs,
@@ -1327,32 +1392,23 @@ class NVCache:
             "nvmm_pwb_lines": self.nvmm.stats_pwb_lines,
             "nvmm_fences": self.nvmm.stats_fence,
             "nvmm_stored_bytes": self.nvmm.stats_stored_bytes,
-            "alloc_wait_s": sum(sh.stats_alloc_wait_s
+            "alloc_wait_s": sum(sh.load_sample()["alloc_wait_s"]
                                 for sh in self.log.shards),
-            "route_epoch": self.router.epoch if self.router else 0,
-            "route_overrides": len(self.router.table) if self.router else 0,
+            "route_epoch": route.get("epoch", 0),
+            "route_overrides": route.get("overrides", 0),
             "route_migrations": (self.cleanup.rebalancer.stats_migrations
                                  if self.cleanup.rebalancer else 0),
-            "route_skew_ratio": (self.router.stats_skew_ratio
-                                 if self.router else 0.0),
-            "route_skipped_uneconomic": (self.router.stats_skipped_uneconomic
-                                         if self.router else 0),
-            "route_stripe_widenings": (self.router.stats_stripe_widenings
-                                       if self.router else 0),
-            "meta_ops": dict(self.ns.stats_meta_ops),
-            "meta_entries": self.ns.stats_meta_entries,
-            "meta_deferred_applies": self.ns.stats_deferred_applies,
-            "mode_migrations": self.stats_mode_migrations,
-            "paged_frames_used": (self.pager.frames_used
-                                  if self.pager else 0),
-            "paged_frame_writes": (self.pager.stats_frame_writes
-                                   if self.pager else 0),
-            "paged_frame_bytes": (self.pager.stats_frame_bytes
-                                  if self.pager else 0),
-            "paged_cow_bytes": (self.pager.stats_cow_bytes
-                                if self.pager else 0),
-            "paged_writebacks": (self.pager.stats_writebacks
-                                 if self.pager else 0),
-            "paged_alloc_fallbacks": (self.pager.stats_alloc_fail
-                                      if self.pager else 0),
+            "route_skew_ratio": route.get("skew_ratio", 0.0),
+            "route_skipped_uneconomic": route.get("skipped_uneconomic", 0),
+            "route_stripe_widenings": route.get("stripe_widenings", 0),
+            "meta_ops": meta["meta_ops"],
+            "meta_entries": meta["meta_entries"],
+            "meta_deferred_applies": meta["deferred_applies"],
+            "mode_migrations": mode_migrations,
+            "paged_frames_used": pager.get("frames_used", 0),
+            "paged_frame_writes": pager.get("frame_writes", 0),
+            "paged_frame_bytes": pager.get("frame_bytes", 0),
+            "paged_cow_bytes": pager.get("cow_bytes", 0),
+            "paged_writebacks": pager.get("writebacks", 0),
+            "paged_alloc_fallbacks": pager.get("alloc_fail", 0),
         }

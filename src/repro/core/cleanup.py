@@ -60,6 +60,23 @@ from repro.core.log import CG_HEAD, META_FDID, LogShard, NVLog
 class CleanupThread(threading.Thread):
     """Drains one shard (the paper's cleanup thread when K == 1)."""
 
+    GUARDED_BY = {
+        "_drain_count": "_drain_lock",
+        # the span carry is drain-thread-confined: only run() touches it,
+        # and start()/join() order everything else against it
+        "_span_deferred": None, "_span_oldest": None, "_span_since": None,
+        "_span_maxidx": None, "_span_carry_batches": None,
+        # single-writer per-thread counters, folded at read by the pool's
+        # summing properties; a live read (api.stats() mid-run) sees a
+        # monotonic approximation by design, exact after join()
+        "error": locking.VOLATILE,
+        "stats_batches": locking.VOLATILE, "stats_entries": locking.VOLATILE,
+        "stats_fsyncs": locking.VOLATILE, "stats_extents": locking.VOLATILE,
+        "stats_pwritevs": locking.VOLATILE,
+        "stats_deferred": locking.VOLATILE,
+        "stats_span_merges": locking.VOLATILE,
+    }
+
     def __init__(self, log: NVLog, shard: LogShard,
                  resolve_file: Callable[[int], Optional[object]],
                  *, fsync_scheduler: Optional[FsyncEpochScheduler] = None,
@@ -80,16 +97,19 @@ class CleanupThread(threading.Thread):
         self.fault_hook: Optional[Callable[[str], None]] = None
         # ^ test-only: called at every plan/apply checkpoint (tag), may set
         #   hard_stop to simulate power loss at that exact drain point
-        self._drain_count = 0                 # nested drain requests
+        self._drain_count = 0                 # guarded-by: _drain_lock
         self._drain_lock = locking.make_lock("leaf:drain_gate")
         # batch-spanning coalescing: the carried (deferred, unconsumed)
         # tail-extent entries of the previous batch, their oldest log index
         # (the identity of the open extent) and when they were first carried
+        # guarded-by: none — drain-thread-confined (ordered by start/join)
         self._span_deferred = 0
         self._span_oldest = -1
         self._span_since = 0.0
         self._span_maxidx = -1                # highest log idx ever carried
         self._span_carry_batches = 0          # batches feeding the open carry
+        # guarded-by: volatile — single-writer (this thread); folded at
+        # read by CleanupPool's properties, exact after join()
         self.error: Optional[BaseException] = None
         self.stats_batches = 0
         self.stats_entries = 0
@@ -300,6 +320,15 @@ class RebalanceThread(threading.Thread):
     untouched and the next epoch retries with fresh load data.
     """
 
+    GUARDED_BY = {
+        "_last_wait": None,                  # rebalance-thread-confined
+        # guarded-by: volatile — single-writer per-thread counters (see
+        # CleanupThread); live stats() reads are approximate by design
+        "error": locking.VOLATILE, "stats_ticks": locking.VOLATILE,
+        "stats_migrations": locking.VOLATILE,
+        "stats_failed_migrations": locking.VOLATILE,
+    }
+
     def __init__(self, log: NVLog, router,
                  migrate: Callable[[object], bool]):
         super().__init__(name="nvcache-rebalance", daemon=True)
@@ -307,7 +336,7 @@ class RebalanceThread(threading.Thread):
         self.router = router
         self.migrate = migrate               # Migration -> installed?
         self.stop_event = threading.Event()
-        self.error: Optional[BaseException] = None
+        self.error: Optional[BaseException] = None  # guarded-by: volatile
         self._last_wait = [0.0] * len(log.shards)   # alloc-wait deltas
         self.stats_ticks = 0
         self.stats_migrations = 0
@@ -359,12 +388,18 @@ class PagerWritebackThread(threading.Thread):
 
     POLL_S = 0.01
 
+    GUARDED_BY = {
+        # guarded-by: volatile — single-writer per-thread counters (see
+        # CleanupThread); live stats() reads are approximate by design
+        "error": locking.VOLATILE, "stats_rounds": locking.VOLATILE,
+    }
+
     def __init__(self, pager, writeback: Callable[[], int]):
         super().__init__(name="nvcache-pager-wb", daemon=True)
         self.pager = pager
         self.writeback = writeback           # owner cb: flush dirty victims
         self.stop_event = threading.Event()
-        self.error: Optional[BaseException] = None
+        self.error: Optional[BaseException] = None  # guarded-by: volatile
         self.stats_rounds = 0
 
     def run(self) -> None:
@@ -512,7 +547,7 @@ class CleanupPool:
 
     @property
     def stats_fsyncs_issued(self) -> int:
-        return self.fsync_scheduler.stats_issued
+        return self.fsync_scheduler.stats_issued_snapshot
 
     @property
     def stats_fsyncs_merged(self) -> int:

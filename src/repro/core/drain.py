@@ -404,15 +404,27 @@ def _apply_serial(plan, fp, abort, stats) -> bool:
 
 # --------------------------------------------------------------------------
 class _SyncState:
-    __slots__ = ("cond", "running", "started", "done", "waiters", "errors")
+    __slots__ = ("cond", "running", "started", "done", "waiters", "errors",
+                 "__weakref__")
+
+    GUARDED_BY = {
+        "running": "cond", "started": "cond", "done": "cond",
+        "errors": "cond",
+        # guarded by the OWNING SCHEDULER's _lock (not expressible as a
+        # self attribute): every touch happens inside the scheduler's
+        # registration/teardown sections, whose lock edges order them
+        "waiters": None,
+    }
 
     def __init__(self):
         self.cond = locking.make_condition("leaf:fsync_epoch")
-        self.running = False
-        self.started = 0              # epochs started
-        self.done = 0                 # epochs completed (success OR failure)
-        self.waiters = 0
+        self.running = False          # guarded-by: cond
+        self.started = 0              # epochs started; guarded-by: cond
+        self.done = 0                 # epochs completed (success OR
+        #                               failure); guarded-by: cond
+        self.waiters = 0              # guarded-by: scheduler._lock
         self.errors: Dict[int, BaseException] = {}   # epoch -> fsync error
+        #                                              guarded-by: cond
 
 
 class FsyncEpochScheduler:
@@ -427,16 +439,29 @@ class FsyncEpochScheduler:
     to at most two device fsyncs instead of K.
     """
 
+    GUARDED_BY = {
+        "_state": "_lock",
+        "stats_requests": "_lock", "stats_issued": "_lock",
+    }
+
     def __init__(self, enabled: bool = True):
         self.enabled = enabled
         self._lock = locking.make_lock("leaf:fsync_sched")
         self._state: Dict[int, _SyncState] = {}   # id(backend) -> state
-        self.stats_requests = 0
-        self.stats_issued = 0
+        #                                           guarded-by: _lock
+        self.stats_requests = 0                   # guarded-by: _lock
+        self.stats_issued = 0                     # guarded-by: _lock
 
     @property
     def stats_merged(self) -> int:
-        return self.stats_requests - self.stats_issued
+        with self._lock:
+            return self.stats_requests - self.stats_issued
+
+    @property
+    def stats_issued_snapshot(self) -> int:
+        """Locked read of ``stats_issued`` for cross-thread reporting."""
+        with self._lock:
+            return self.stats_issued
 
     def fsync(self, backend) -> None:
         if not self.enabled:

@@ -34,6 +34,8 @@ LOCK HIERARCHY (parsed by repro.analysis.lint — keep the column format):
     90     leaf:fsync_sched      FsyncEpochScheduler._lock
     90     leaf:fsync_epoch      drain._SyncState.cond
     90     leaf:atomic_int       AtomicInt._lock
+    90     leaf:stats            NVCache._stats_lock — engine-wide stats
+                                 counters and the stats() snapshot
 
 Rules (checked by repro.analysis.lockcheck at runtime):
 
@@ -61,6 +63,44 @@ Likewise the dirty-miss replay holds ``page_cleanup`` while reading shard
 state.  The hierarchy records the code's true order; the commit
 *protocol* ordering (entries before head flag before psync) is pmcheck's
 job, not this table's.
+
+GUARDED-BY CONTRACT (the second source-of-truth table)
+------------------------------------------------------
+
+Alongside the hierarchy, every core class with cross-thread mutable
+state declares *which lock guards which field* in a class-level
+``GUARDED_BY`` dict, with a ``# guarded-by:`` comment at the field's
+definition site.  The declarations are enforced two ways: statically by
+``repro.analysis.lint`` (L004 — guarded field accessed outside a
+``with <its guard>`` block; L005 — public mutable attribute of a
+lock-owning class with no declaration) and at runtime by
+``repro.analysis.racecheck`` (RC003 — guarded field touched without the
+guard held, plus the RC001/RC002 lockset+vector-clock race analysis).
+
+Spec grammar — ``GUARDED_BY = {"field": spec, ...}`` where spec is:
+
+* ``"attr"``           — the lock at ``self.attr`` must be held for
+                         every read and write (once the field is shared
+                         between threads);
+* ``("a", "b", ...)``  — any-of: condition variables sharing one lock
+                         (e.g. a shard's ``_lock``/``_space``/
+                         ``_committed``) — holding any satisfies;
+* ``"write:attr"``     — writes require the lock; reads are lock-free
+                         by design (immutable-swap tables: the router's
+                         epoch table, the radix tree) and excluded from
+                         the read-write race analysis;
+* ``None``             — no lock: ordering comes from happens-before
+                         edges only (thread-confined state published at
+                         start/join/Event handoffs, e.g. the drain
+                         thread's span carry).  racecheck still applies
+                         the epoch analysis, but not RC003;
+* ``VOLATILE``         — racy by design (approximate counters,
+                         opportunistic hints).  Excluded from every
+                         check; keep rare and justified in the
+                         ``# guarded-by:`` comment.
+
+Subclasses inherit and may extend the parent's table; use
+:func:`guards` to read the merged view.
 """
 from __future__ import annotations
 
@@ -97,6 +137,22 @@ def parse_hierarchy(doc: Optional[str] = None) -> Dict[str, dict]:
 
 
 HIERARCHY: Dict[str, dict] = parse_hierarchy()
+
+#: guarded-by spec for fields that are racy by design (see the
+#: GUARDED-BY CONTRACT section of the module docstring)
+VOLATILE = "volatile"
+
+
+def guards(cls: type) -> Dict[str, object]:
+    """Merged ``GUARDED_BY`` view of ``cls`` across its MRO (subclasses
+    inherit the parent's declarations and may extend/override them).
+    Returns ``{}`` for classes with no declarations."""
+    merged: Dict[str, object] = {}
+    for c in reversed(cls.__mro__):
+        own = c.__dict__.get("GUARDED_BY")
+        if own:
+            merged.update(own)
+    return merged
 
 # Installed by repro.analysis.sanitize before any stack is constructed;
 # when None the factories return raw threading primitives (zero overhead).

@@ -50,7 +50,7 @@ Drain coordination
 Between "record committed in the log" and "backend effect applied" the
 entry must not be retired — a crash in that window must still replay the
 op.  The namespace registers a **not-yet-applied marker** for the entry in
-:meth:`Namespace.journal`'s pre-commit ``on_alloc`` hook (the same trick
+:meth:`Namespace.journal_locked`'s pre-commit ``on_alloc`` hook (the same trick
 the dirty-page index uses, so the drain can never observe the entry
 without its marker) and clears it in :meth:`Namespace.mark_applied` once
 the backend namespace mutation is done.  The drain
@@ -101,29 +101,60 @@ class Namespace:
     journal record and its backend effect.
     """
 
+    GUARDED_BY = {
+        # mutated only under ``lock`` (the *_locked helpers); read lock-free
+        # by the drain's resolve and by existence probes — safe because a
+        # file with pending entries is never unbound, so any binding the
+        # drain observes is stable
+        "files": "write:lock", "by_fdid": "write:lock",
+        "fdid_free": "lock",
+        # journaled-record markers: mutated under _ua_lock (the _consumed
+        # condition shares it); has_unapplied's lock-free read is a cheap
+        # maybe-stale pre-check by design, hence write-only
+        "_unapplied": "write:_ua_lock",
+        "_live": ("_ua_lock", "_consumed"),
+        # append under the caller-held meta lock, popleft under _apply_lock;
+        # deque ops are individually atomic and FIFO order is preserved
+        "_deferred": locking.VOLATILE,
+        "stats_meta_ops": "lock", "stats_meta_entries": "lock",
+        "stats_deferred_applies": "_apply_lock",
+    }
+
     def __init__(self, log: NVLog, tier, fd_max: int):
         self.log = log
         self.tier = tier
         self.lock = locking.make_lock("meta")
+        # guarded-by: write:lock — see GUARDED_BY for the read-side story
         self.files: Dict[str, object] = {}       # path -> api.File
         self.by_fdid: Dict[int, object] = {}
         self.fdid_free: List[int] = list(range(fd_max - 1, -1, -1))
+        #                                          guarded-by: lock
         self._unapplied: Set[Tuple[int, int]] = set()  # {(sid, idx)}
+        #                                guarded-by: write:_ua_lock
         self._live: Set[Tuple[int, int]] = set()       # journaled, not yet
-        #                                                consumed by the drain
+        #                                                consumed by the
+        #                                                drain; guarded-by:
+        #                                                _ua_lock/_consumed
         self._ua_lock = locking.make_lock("leaf:ns_unapplied")
         self._consumed = locking.make_condition("leaf:ns_unapplied", self._ua_lock)
         self._deferred = collections.deque()      # (seq, fn, marks) FIFO
+        #                                           guarded-by: volatile
         self._apply_lock = locking.make_lock("leaf:ns_apply")  # serializes appliers
         self.stats_meta_ops = {"create": 0, "rename": 0, "unlink": 0,
-                               "ftruncate": 0}
+                               "ftruncate": 0}    # guarded-by: lock
         self.stats_meta_entries = 0               # log entries appended
-        self.stats_deferred_applies = 0           # queued backend applies run
+        #                                           guarded-by: lock
+        self.stats_deferred_applies = 0           # queued backend applies
+        #                                           run; guarded-by:
+        #                                           _apply_lock
 
     # ------------------------------------------------------------ journal
-    def journal(self, op: int, fdid: int, aux: int, a: str,
-                b: str = "") -> Tuple[List[Tuple[int, int]], int]:
+    def journal_locked(self, op: int, fdid: int, aux: int, a: str,
+                       b: str = "") -> Tuple[List[Tuple[int, int]], int]:
         """Durably commit one metadata record; returns ``(marks, seq)``.
+        Caller holds :attr:`lock` (every namespace op journals inside its
+        file-table critical section — that is what keeps a concurrent open
+        from slipping between journal record and backend effect).
         The caller applies the backend effect, then calls
         :meth:`note_backend_applied` with ``seq`` and (in a ``finally``)
         :meth:`mark_applied` with ``marks``.  The markers are registered
@@ -147,6 +178,17 @@ class Namespace:
                 MOP_UNLINK: "unlink", MOP_FTRUNCATE: "ftruncate"}[op]
         self.stats_meta_ops[name] += 1
         return marks, seq
+
+    def snapshot_stats(self) -> dict:
+        """Coherent copy of the metadata counters for api.stats(): each
+        counter is read under its own guard, never bare."""
+        with self.lock:
+            ops = dict(self.stats_meta_ops)
+            entries = self.stats_meta_entries
+        with self._apply_lock:
+            deferred = self.stats_deferred_applies
+        return {"meta_ops": ops, "meta_entries": entries,
+                "deferred_applies": deferred}
 
     def note_backend_applied(self, seq: int) -> None:
         """Advance the backend's **applied watermark**: the tier records
@@ -235,22 +277,22 @@ class Namespace:
                                            timeout=timeout)
 
     # ------------------------------------------------------------ fd slots
-    def alloc_fdid(self) -> int:
+    def alloc_fdid_locked(self) -> int:
         """Caller holds :attr:`lock`."""
         if not self.fdid_free:
             raise OSError("fd table full")
         return self.fdid_free.pop()
 
-    def free_fdid(self, fdid: int) -> None:
+    def free_fdid_locked(self, fdid: int) -> None:
         """Caller holds :attr:`lock`; the fdid's entries must be drained."""
         self.fdid_free.append(fdid)
 
-    def bind(self, path: str, f: object) -> None:
+    def bind_locked(self, path: str, f: object) -> None:
         """Caller holds :attr:`lock`."""
         self.files[path] = f
         self.by_fdid[f.fdid] = f
 
-    def unbind(self, f: object) -> None:
+    def unbind_locked(self, f: object) -> None:
         """Caller holds :attr:`lock`."""
         self.files.pop(f.path, None)
         self.by_fdid.pop(f.fdid, None)

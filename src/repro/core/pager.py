@@ -107,12 +107,21 @@ class PagedRegion:
     (write path, read miss, writeback, invalidate) already holds — so one
     frame is never written and read concurrently."""
 
+    GUARDED_BY = {
+        "free": "lock", "dirty": "lock", "owner": "lock", "_tick": "lock",
+        "stats_frame_writes": "lock", "stats_frame_bytes": "lock",
+        "stats_cow_bytes": "lock", "stats_writebacks": "lock",
+        "stats_invalidated": "lock", "stats_alloc_fail": "lock",
+    }
+
     def __init__(self, nvmm: NVMM, policy: Policy, seq_source):
         self.nvmm = nvmm
         self.policy = policy
         self.page_size = policy.page_size
         self.seq_source = seq_source          # NVLog.next_seq
         self.lock = locking.make_lock("pager_free")
+        # guarded-by: lock — the whole pool state (free list, dirty set,
+        # owner map, tick) and every stats counter below
         self.free: List[int] = list(range(policy.page_frames - 1, -1, -1))
         self.dirty: Dict[int, int] = {}       # idx -> dirty tick (FIFO age)
         self.owner: Dict[int, Tuple[int, int]] = {}  # idx -> (fdid, page_no)
@@ -211,7 +220,7 @@ class PagedRegion:
         img[:len(old)] = old
         img[s:e] = data
         new_len = len(img)
-        self.stats_cow_bytes += max(0, len(old) - (e - s))
+        cow = max(0, len(old) - (e - s))
         crc = zlib.crc32(bytes(img)) if self.policy.verify_crc else 0
         seq = self.seq_source()
         doff = fb + FRAME_HDR + new_slot * ps
@@ -227,6 +236,9 @@ class PagedRegion:
             self.dirty.setdefault(idx, self._tick)
             self.stats_frame_writes += 1
             self.stats_frame_bytes += e - s
+            # counted here, not at the unlocked computation site: two
+            # writers in frame_write for different pages race otherwise
+            self.stats_cow_bytes += cow
 
     def truncate_frame(self, idx: int, new_len: int) -> None:
         """Durably clip a frame's valid length (file shrank mid-page): a
@@ -292,3 +304,19 @@ class PagedRegion:
     def frames_dirty(self) -> int:
         with self.lock:
             return len(self.dirty)
+
+    def snapshot_stats(self) -> Dict[str, int]:
+        """Coherent point-in-time copy of the pool counters (api.stats()
+        reads this instead of the live fields — the writeback thread and
+        concurrent writers mutate them under ``lock``)."""
+        with self.lock:
+            return {
+                "frame_writes": self.stats_frame_writes,
+                "frame_bytes": self.stats_frame_bytes,
+                "cow_bytes": self.stats_cow_bytes,
+                "writebacks": self.stats_writebacks,
+                "invalidated": self.stats_invalidated,
+                "alloc_fail": self.stats_alloc_fail,
+                "frames_used": self.policy.page_frames - len(self.free),
+                "frames_dirty": len(self.dirty),
+            }

@@ -71,7 +71,19 @@ class PageDesc:
     """
 
     __slots__ = ("page_no", "atomic_lock", "cleanup_lock", "ref_lock",
-                 "entries", "content", "accessed", "prefetched")
+                 "entries", "content", "accessed", "prefetched",
+                 "__weakref__")
+
+    GUARDED_BY = {
+        # rebound/appended under ref_lock; the dirty_refs length probe is
+        # a lock-free read by design (callers hold atomic_lock, and a
+        # stale length only delays a replay decision)
+        "entries": "write:ref_lock",
+        "content": "atomic_lock",
+        # second-chance recency hints: racy by design (the paper's clock
+        # approximation) — a lost flag costs one early eviction at most
+        "accessed": locking.VOLATILE, "prefetched": locking.VOLATILE,
+    }
 
     def __init__(self, page_no: int):
         self.page_no = page_no
@@ -83,9 +95,11 @@ class PageDesc:
         # writer append vs drain retire
         self.ref_lock = locking.make_lock("leaf:ref")
         self.entries: list = []                # live EntryRefs, seq order
-        self.content: Optional[PageContent] = None
-        self.accessed = False
+        #                                        guarded-by: write:ref_lock
+        self.content: Optional[PageContent] = None  # guarded-by: atomic_lock
+        self.accessed = False                  # guarded-by: volatile (hint)
         self.prefetched = False                # loaded by readahead, unread
+        #                                        guarded-by: volatile (hint)
 
     def add_ref(self, ref) -> None:
         """Write path: register a just-committed entry on this page."""
@@ -125,9 +139,17 @@ class RadixTree:
     FANOUT_BITS = 6
     FANOUT = 1 << FANOUT_BITS
 
+    GUARDED_BY = {
+        # immutable-node publishes under the insert lock; lookups read
+        # lock-free (descriptors are never removed until the tree dies)
+        "_root": "write:_insert_lock", "_height": "write:_insert_lock",
+    }
+
     def __init__(self):
         self._root: list = [None] * self.FANOUT
         self._height = 1                     # levels below root
+        #                                      (both guarded-by:
+        #                                      write:_insert_lock)
         self._insert_lock = locking.make_lock("leaf:radix")
 
     def _capacity_bits(self) -> int:
@@ -195,11 +217,21 @@ class LRUCache:
     cycle between two concurrent misses.
     """
 
+    GUARDED_BY = {
+        "_queue": "_lock", "_allocated": "_lock",
+        "stats_evictions": "_lock", "stats_hits": "_lock",
+        "stats_misses": "_lock",
+    }
+
     def __init__(self, capacity: int, page_size: int):
         self.capacity = max(2, capacity)
         self.page_size = page_size
         self._queue: deque[PageContent] = deque()
         self._lock = locking.make_lock("leaf:lru")   # the paper's "LRU lock"
+        # guarded-by: _lock — pool state and the hit/miss/eviction counters
+        # (readers use note_hit/note_miss/snapshot_stats, never the bare
+        # fields: the old bare `lru.stats_hits += 1` under two different
+        # page locks was a lost-update race)
         self._allocated = 0
         self.stats_evictions = 0
         self.stats_hits = 0
@@ -240,7 +272,10 @@ class LRUCache:
                 return "hot", None
             desc.content = None                # -> unloaded-{clean,dirty}
             content.desc = None
-            self.stats_evictions += 1
+            with self._lock:
+                # under _lock, not just the victim's atomic_lock: two
+                # concurrent evictions of different pages would race here
+                self.stats_evictions += 1
             return "evicted", content
         finally:
             desc.atomic_lock.release()
@@ -292,6 +327,27 @@ class LRUCache:
         desc.accessed = True
         with self._lock:
             self._queue.append(content)
+
+    def note_hit(self) -> None:
+        """Count a read-cache hit.  Call sites used to bump ``stats_hits``
+        directly while holding only their page's atomic lock — two hits on
+        different pages lost updates; the LRU lock makes it a counter."""
+        with self._lock:
+            self.stats_hits += 1
+
+    def note_miss(self) -> None:
+        with self._lock:
+            self.stats_misses += 1
+
+    def snapshot_stats(self) -> dict:
+        """Coherent copy of the cache counters for api.stats()."""
+        with self._lock:
+            return {
+                "hits": self.stats_hits,
+                "misses": self.stats_misses,
+                "evictions": self.stats_evictions,
+                "allocated": self._allocated,
+            }
 
     def drop_all(self) -> None:
         with self._lock:

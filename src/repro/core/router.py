@@ -178,6 +178,17 @@ class EpochRouter:
     serialized by the rebalance thread (plus ``_lock`` for safety).
     """
 
+    GUARDED_BY = {
+        # immutable-swap tables: installs rebind a fresh dict under _lock,
+        # lookups read the reference lock-free and see one epoch or the next
+        "epoch": "write:_lock", "table": "write:_lock",
+        "stripe_shift": "write:_lock",
+        "_key_load": "_lock", "_key_fdid": "_lock", "_streak": "_lock",
+        "stats_migrations": "_lock", "stats_epochs": "_lock",
+        "stats_installs": "_lock", "stats_skew_ratio": "_lock",
+        "stats_skipped_uneconomic": "_lock", "stats_stripe_widenings": "_lock",
+    }
+
     def __init__(self, nvmm: NVMM, policy: Policy, *, sampling: bool = True):
         """``sampling=False`` builds a route-only router (used by
         ``NVLog``'s attach auto-adoption, where no rebalance thread exists
@@ -187,10 +198,14 @@ class EpochRouter:
         self.policy = policy
         self.sampling = sampling
         self._lock = locking.make_lock("leaf:router")  # installs + counters
-        self.epoch = 0
+        self.epoch = 0                         # guarded-by: write:_lock
         self.table: Dict[int, int] = {}        # key -> sid (immutable; swapped)
+        #                                        guarded-by: write:_lock
         self._key_load: Dict[int, int] = {}    # entries appended this epoch
         self._key_fdid: Dict[int, int] = {}    # key -> owning fdid
+        #                                        (both guarded-by: _lock)
+        # guarded-by: _lock — planner/installer counters; api.stats()
+        # reads them through snapshot_stats()
         self.stats_migrations = 0
         self.stats_epochs = 0                  # rebalance ticks evaluated
         self.stats_installs = 0                # epochs actually installed
@@ -199,12 +214,17 @@ class EpochRouter:
         #                                        model (barrier > gain)
         self.stats_stripe_widenings = 0        # width-tuning installs
         self._streak: Dict[int, int] = {}      # fdid -> consecutive epochs
-        #                                        the planner wanted to move it
+        #                                        the planner wanted to move
+        #                                        it; guarded-by: _lock
+        #                                        (drop_fdid pops from api
+        #                                        threads while the planner
+        #                                        rebinds it)
         epoch, table, shifts = load_route_record(nvmm, policy)
         self.epoch = epoch
         self.table = table
         self.stripe_shift: Dict[int, int] = shifts  # fdid -> width shift
-        #   (immutable like ``table``: installs swap a fresh dict)
+        #   (immutable like ``table``: installs swap a fresh dict;
+        #   guarded-by: write:_lock)
 
     # ---------------------------------------------------------------- route
     def stripe_bytes_of(self, fdid: int) -> int:
@@ -287,12 +307,21 @@ class EpochRouter:
         ``wait_deltas`` (alloc-wait seconds this epoch) breaks ties for
         the hot shard — of two equally-loaded shards, the one writers
         actually stalled on is the one worth relieving.
+
+        Holds ``_lock`` end to end: the planner mutates the epoch counters
+        and the migration streaks, which ``drop_fdid`` (api threads) also
+        touches.  Pure CPU, once per epoch — writers only contend on their
+        short ``note_append`` during the planning instant.
         """
         with self._lock:
-            key_load = self._key_load
-            key_fdid = self._key_fdid
-            self._key_load = {}
-            self._key_fdid = {}
+            return self._plan_locked(queue_depths, wait_deltas)
+
+    def _plan_locked(self, queue_depths: Optional[List[int]],
+                     wait_deltas: Optional[List[float]]) -> List[Migration]:
+        key_load = self._key_load
+        key_fdid = self._key_fdid
+        self._key_load = {}
+        self._key_fdid = {}
         self.stats_epochs += 1
         k = self.policy.shards
         if k == 1 or sum(key_load.values()) < MIN_EPOCH_ENTRIES:
@@ -359,9 +388,9 @@ class EpochRouter:
                 loads[hot] -= key_load[best]
                 loads[cold] += key_load[best]
                 key_sid[best] = cold
-        return self._tune_widths(out)
+        return self._tune_widths_locked(out)
 
-    def _tune_widths(self, out: List[Migration]) -> List[Migration]:
+    def _tune_widths_locked(self, out: List[Migration]) -> List[Migration]:
         """Stripe-width auto-tuning: a fdid the planner keeps wanting to
         migrate — ``stripe_tune_streak`` consecutive epochs — is hot enough
         that chasing individual stripes (at most ``MAX_MIGRATIONS_PER_EPOCH``
@@ -494,6 +523,21 @@ class EpochRouter:
         self.nvmm.store(base, _RT_HDR.pack(self.epoch, len(entries), crc))
         self.nvmm.pwb(base, ROUTE_HDR)
         self.nvmm.psync()
+
+    def snapshot_stats(self) -> Dict[str, float]:
+        """Coherent copy of the planner/installer counters for api.stats()
+        (they are mutated under ``_lock`` by the rebalance thread)."""
+        with self._lock:
+            return {
+                "epoch": self.epoch,
+                "overrides": len(self.table),
+                "epochs": self.stats_epochs,
+                "installs": self.stats_installs,
+                "skew_ratio": self.stats_skew_ratio,
+                "skipped_uneconomic": self.stats_skipped_uneconomic,
+                "stripe_widenings": self.stats_stripe_widenings,
+                "stripe_shifts": len(self.stripe_shift),
+            }
 
 
 def load_route_record(nvmm: NVMM, policy: Policy

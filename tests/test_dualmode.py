@@ -426,7 +426,7 @@ def test_drain_applies_deferred_record_when_caller_does_not():
     nv.close(fd)
     applied = []
     with nv._meta:
-        marks, mseq = nv.ns.journal(MOP_RENAME, META_NO_FDID, 0, "/a", "/b")
+        marks, mseq = nv.ns.journal_locked(MOP_RENAME, META_NO_FDID, 0, "/a", "/b")
         nv.ns.queue_apply(
             mseq, lambda: (tier.rename("/a", "/b"), applied.append(1)), marks)
     # note: apply_deferred() deliberately NOT called here

@@ -44,7 +44,7 @@ def test_lc001_on_level_inversion():
     with shard:
         with meta:                      # 50 -> 10: inversion
             pass
-    assert any(v.startswith("LC001") for v in tr.violations)
+    assert any(v.code == "LC001" for v in tr.violations)
 
 
 def test_in_order_acquire_is_clean_and_recorded():
@@ -64,7 +64,7 @@ def test_lc002_on_descending_multi_keys():
     with p3:
         with p1:                        # same class, key 1 after 3
             pass
-    assert any(v.startswith("LC002") for v in tr.violations)
+    assert any(v.code == "LC002" for v in tr.violations)
     tr2 = LockTracer()
     a, b = lk(tr2, "page_atomic", order_key=1), lk(tr2, "page_atomic",
                                                    order_key=2)
@@ -88,7 +88,7 @@ def test_lc004_backend_io_under_shard_lock():
     shard = lk(tr, "shard")
     with shard:
         tr.on_backend_io("pwritev", "/f")
-    assert any(v.startswith("LC004") for v in tr.violations)
+    assert any(v.code == "LC004" for v in tr.violations)
     tr.violations.clear()
     tr.on_backend_io("fsync", "/f")           # not held: fine
     assert tr.violations == []
@@ -100,7 +100,7 @@ def test_lc003_cycle_detection():
     tr.edges[("b", "c")] = "t1"
     tr.edges[("c", "a")] = "t2"
     assert tr.check_cycles()
-    assert any(v.startswith("LC003") for v in tr.violations)
+    assert any(v.code == "LC003" for v in tr.violations)
     tr2 = LockTracer()
     tr2.edges[("a", "b")] = "t1"
     tr2.edges[("a", "c")] = "t1"

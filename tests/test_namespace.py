@@ -463,7 +463,7 @@ def test_write_racing_unlink_commit_cannot_resurrect_the_path():
     nv.pwrite(fd, b"pre" * 20, 0)
     # the unlink record commits (durable), but the crash preempts both the
     # fd-table clear and the backend apply...
-    marks, _seq = nv.ns.journal(MOP_UNLINK, nv._of(fd).file.fdid, 0, "/f")
+    marks, _seq = nv.ns.journal_locked(MOP_UNLINK, nv._of(fd).file.fdid, 0, "/f")
     nv.ns.mark_applied(marks)
     # ...while a racing writer's group commits at a higher seq
     nv.pwrite(fd, b"RACE", 0)
