@@ -29,7 +29,7 @@ def policy(log_mib: float, *, entry=4096, batch_min=1000, batch_max=10000,
            drain_coalesce=True, fsync_epoch=True, readahead=8,
            span_batches=True, deadline_ms=5.0, rebalance=False,
            rebalance_epoch_ms=50.0, placement_groups=1,
-           page_frames=0, classify_window=32) -> Policy:
+           page_frames=0, classify_window=32, obs_level=0) -> Policy:
     return Policy(entry_size=entry, log_entries=max(8 * shards, int(log_mib * 1024 * 1024 // entry)),
                   page_size=4096, read_cache_pages=read_pages,
                   batch_min=batch_min, batch_max=batch_max, verify_crc=False,
@@ -41,7 +41,8 @@ def policy(log_mib: float, *, entry=4096, batch_min=1000, batch_max=10000,
                   shard_rebalance=rebalance,
                   rebalance_epoch_ms=rebalance_epoch_ms,
                   placement_groups=placement_groups,
-                  page_frames=page_frames, classify_window=classify_window)
+                  page_frames=page_frames, classify_window=classify_window,
+                  obs_level=obs_level)
 
 
 @dataclasses.dataclass
@@ -67,7 +68,7 @@ def make_stack(name: str, *, log_mib: float = 64, batch_min=1000,
                deadline_ms: float = 5.0, rebalance: bool = False,
                rebalance_epoch_ms: float = 50.0,
                placement_groups: int = 1, page_frames: int = 0,
-               classify_window: int = 32) -> Stack:
+               classify_window: int = 32, obs_level: int = 0) -> Stack:
     if name == "nvcache+ssd":
         tier = tiers.Tier(tiers.SSD_SATA, sync=False, scale=scale)
         nv = NVCache(policy(log_mib, batch_min=batch_min, batch_max=batch_max,
@@ -80,7 +81,8 @@ def make_stack(name: str, *, log_mib: float = 64, batch_min=1000,
                             rebalance_epoch_ms=rebalance_epoch_ms,
                             placement_groups=placement_groups,
                             page_frames=page_frames,
-                            classify_window=classify_window), tier)
+                            classify_window=classify_window,
+                            obs_level=obs_level), tier)
         return Stack(name, NVCacheFS(nv), nv, tier)
     if name == "nvcache+nova":
         tier = tiers.Tier(NOVA, sync=False, scale=scale)
@@ -94,7 +96,8 @@ def make_stack(name: str, *, log_mib: float = 64, batch_min=1000,
                             rebalance_epoch_ms=rebalance_epoch_ms,
                             placement_groups=placement_groups,
                             page_frames=page_frames,
-                            classify_window=classify_window), tier)
+                            classify_window=classify_window,
+                            obs_level=obs_level), tier)
         return Stack(name, NVCacheFS(nv), nv, tier)
     if name == "dm-writecache":
         tier = tiers.DMWriteCacheTier(scale=scale)

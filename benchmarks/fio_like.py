@@ -2,13 +2,20 @@
 fsync=1 semantics (synchronous durability on every stack), per-interval
 instantaneous throughput + running average latency + cumulative bytes.
 ``concurrent_random_write`` is the numjobs=N variant used by the sharded-log
-scaling experiment."""
+scaling experiment.
+
+Per-op commit latency is recorded into a :class:`repro.obs.metrics`
+histogram (per-thread cells, so N writers never contend on it) and every
+result carries a ``lat`` snapshot with p50/p95/p99 — fio's
+``clat percentiles``, not just the running average."""
 from __future__ import annotations
 
 import threading
 import time
 
 import numpy as np
+
+from repro.obs.metrics import Histogram
 
 
 def random_write(fs, *, total_mib: float, file_mib: float, bs: int = 4096,
@@ -20,6 +27,7 @@ def random_write(fs, *, total_mib: float, file_mib: float, bs: int = 4096,
     n_slots = max(1, int(file_mib * (1 << 20)) // bs)
     buf = b"x" * bs
     samples = []
+    hist = Histogram("fio.clat_us")
     t_start = time.perf_counter()
     t_mark, ops_mark = t_start, 0
     lat_sum = 0.0
@@ -33,7 +41,9 @@ def random_write(fs, *, total_mib: float, file_mib: float, bs: int = 4096,
         else:
             fs.pwrite(fd, buf, off)
             fs.fsync(fd)
-        lat_sum += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        hist.record_ns(int(dt * 1e9))
+        lat_sum += dt
         now = time.perf_counter()
         if now - t_mark >= interval_s:
             samples.append({
@@ -48,6 +58,7 @@ def random_write(fs, *, total_mib: float, file_mib: float, bs: int = 4096,
         "seconds": total,
         "mib_per_s": n_ops * bs / total / (1 << 20),
         "avg_lat_us": 1e6 * lat_sum / max(1, n_ops),
+        "lat": hist.snapshot(),
         "samples": samples,
         "writes": n_ops - done_reads,
         "reads": done_reads,
@@ -66,6 +77,7 @@ def _concurrent_write(fs, *, threads: int, total_mib: float, bs: int,
     buf = b"x" * bs
     done = [0] * threads
     lat = [0.0] * threads
+    hist = Histogram("fio.clat_us")      # per-thread cells: no contention
     finished = threading.Event()
 
     def worker(t):
@@ -76,7 +88,9 @@ def _concurrent_write(fs, *, threads: int, total_mib: float, bs: int,
             t0 = time.perf_counter()
             fs.pwrite(fd, buf, off)
             fs.fsync(fd)
-            lat[t] += time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            hist.record_ns(int(dt * 1e9))
+            lat[t] += dt
             done[t] = i + 1
 
     ts = [threading.Thread(target=worker, args=(t,)) for t in range(threads)]
@@ -109,6 +123,7 @@ def _concurrent_write(fs, *, threads: int, total_mib: float, bs: int,
         "seconds": total,
         "mib_per_s": ops * bs / total / (1 << 20),
         "avg_lat_us": 1e6 * sum(lat) / max(1, ops),
+        "lat": hist.snapshot(),
         "samples": samples,
         "writes": ops,
         "bytes": ops * bs,

@@ -1,11 +1,20 @@
 """CI entry point: run the PR's headline benchmarks and emit ONE
-machine-readable JSON (``BENCH_pr7.json``) so the perf trajectory of the
+machine-readable JSON (``BENCH_pr10.json``) so the perf trajectory of the
 repo is diffable from PR 2 onward.
 
-    PYTHONPATH=src python benchmarks/run_all.py [--out BENCH_pr7.json] [--quick]
+    PYTHONPATH=src python benchmarks/run_all.py [--out BENCH_pr10.json] [--quick]
 
-Emitted metrics (schema ``bench_schema: 7``):
+Emitted metrics (schema ``bench_schema: 10``):
 
+* ``latency`` — the PR-10 observability plane: per-stage write-path
+  latency percentiles from the span profiler at ``obs_level=2``
+  (p50/p95/p99 per stage, foreground spans reconciled against
+  wall-clock, a fence-cost row dividing commit-span time through the
+  NVMM pwb/fence counters) plus the plain-vs-instrumented overhead
+  rows CI gates on; fio-style results across all figures now carry a
+  ``lat`` percentile snapshot, not just a running average;
+* ``meta`` — reproducibility stamp: git sha, schema, device scale,
+  policy knobs and the RNG seeds every figure draws from;
 * ``dualmode`` — the PR-7 adaptive logging-vs-paging engine: steady-state
   persisted bytes (NVMM + backend) per committed byte on an
   overwrite-heavy stream, paged vs log mode (acceptance >= 1.5x fewer),
@@ -35,8 +44,31 @@ import sys
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks import (fig3_dbbench, fig8_coalescing, fig9_readpath,  # noqa: E402
-                        fig10_skew, fig_dualmode)
+from benchmarks import (backends, fig3_dbbench, fig8_coalescing,  # noqa: E402
+                        fig9_readpath, fig10_skew, fig_dualmode, fig_obs)
+
+
+def _meta(quick: bool) -> dict:
+    """Reproducibility stamp: enough to re-run THIS emission bit-for-bit
+    (modulo wall-clock noise) from a clean checkout."""
+    import dataclasses
+    import subprocess
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    try:
+        sha = subprocess.run(["git", "rev-parse", "HEAD"], cwd=root,
+                             capture_output=True, text=True,
+                             timeout=10).stdout.strip() or None
+    except Exception:
+        sha = None
+    return {
+        "git_sha": sha,
+        "bench_schema": 10,
+        "quick": quick,
+        "device_scale": backends.SCALE,
+        "policy_defaults": dataclasses.asdict(backends.policy(64)),
+        "seeds": {"fio": 11, "skew_workload": 11, "skew_zipf": 7,
+                  "dbbench_keys": 7},
+    }
 
 
 def run(quick: bool = False) -> dict:
@@ -55,6 +87,9 @@ def run(quick: bool = False) -> dict:
         n_pages=16 if quick else 32, passes=4 if quick else 8)
     dual_trickle = fig_dualmode.run_trickle_parity(
         n_writes=64 if quick else 192)
+    spans = fig_obs.run_span_breakdown(total_mib=1.5 if quick else 3.0)
+    overhead = fig_obs.run_obs_overhead(total_mib=1.0 if quick else 2.0,
+                                        repeats=3 if quick else 5)
 
     leg_by = {(r["model"], r["stack"]): r for r in legacy}
 
@@ -85,9 +120,24 @@ def run(quick: bool = False) -> dict:
     dual_tr_by = {r["mode"]: r for r in dual_trickle}
     bpc_log = dual_by["log"]["persisted_per_committed_byte"]
     bpc_paged = dual_by["paged"]["persisted_per_committed_byte"]
+    clat = spans["clat"]
     return {
-        "bench_schema": 7,
-        "pr": 7,
+        "bench_schema": 10,
+        "pr": 10,
+        "meta": _meta(quick),
+        "latency": {
+            "clat_p50_us": clat["p50_us"],
+            "clat_p95_us": clat["p95_us"],
+            "clat_p99_us": clat["p99_us"],
+            "op_p50_us": spans["op_p50_us"],
+            "op_p95_us": spans["op_p95_us"],
+            "op_p99_us": spans["op_p99_us"],
+            "span_coverage_ratio": spans["span_coverage_ratio"],
+            "stages": spans["stages"],
+            "fence_cost": spans["fence_cost"],
+            "obs_overhead_pct": overhead["overhead_pct"],
+            "detail": [spans, overhead],
+        },
         "dualmode": {
             "persisted_bytes_per_committed_byte_paged": bpc_paged,
             "persisted_bytes_per_committed_byte_log": bpc_log,
@@ -162,7 +212,7 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-        "BENCH_pr7.json"))
+        "BENCH_pr10.json"))
     ap.add_argument("--quick", action="store_true",
                     help="smaller workload for CI smoke runs")
     args = ap.parse_args()
@@ -171,6 +221,13 @@ def main() -> None:
         json.dump(result, fh, indent=2, sort_keys=True)
         fh.write("\n")
     leg = result["legacy"]
+    lat = result["latency"]
+    print(f"latency plane: commit p50/p95/p99 "
+          f"{lat['clat_p50_us']:.0f}/{lat['clat_p95_us']:.0f}/"
+          f"{lat['clat_p99_us']:.0f}us, span coverage "
+          f"{100 * lat['span_coverage_ratio']:.1f}% of wall-clock, "
+          f"obs_level=2 overhead {lat['obs_overhead_pct']:+.1f}%",
+          flush=True)
     print(f"wrote {args.out}: dual persistence engine — paged mode persists "
           f"{result['dualmode']['byte_reduction_x']:.2f}x fewer bytes per "
           f"committed byte than the log on overwrite-heavy streams "

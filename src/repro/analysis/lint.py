@@ -1,4 +1,5 @@
-"""AST static pass over ``repro.core`` — ``python -m repro.analysis.lint``.
+"""AST static pass over ``repro.core`` + ``repro.obs`` —
+``python -m repro.analysis.lint``.
 
 Checks (source of truth for the hierarchy is the LOCK HIERARCHY table in
 ``repro/core/locking.py``'s docstring, parsed at startup):
@@ -32,6 +33,12 @@ Checks (source of truth for the hierarchy is the LOCK HIERARCHY table in
   ``__init__`` with no ``GUARDED_BY`` declaration for it: mutable shared
   state the race detector cannot see.  Annotation completeness — the
   guarded-by table's version of the hierarchy-table L001 rule.
+* ``L006`` — every metric/span name literal (arguments to the
+  ``repro.obs.metrics`` constructors / ``Registry`` binders, keys of a
+  ``bind_group`` dict, keys of a ``_LEVELS`` span table) must match the
+  documented ``subsystem.noun_unit`` grammar (see
+  ``src/repro/obs/README.md``); the registry enforces the same rule at
+  runtime, this catches names on paths tests never execute.
 
 Suppress a finding by appending ``# lint: allow(CODE)`` to the flagged
 line.  Exit status: 0 when clean, 1 with findings (one per line:
@@ -45,10 +52,15 @@ from pathlib import Path
 from typing import Dict, List, Set, Tuple
 
 from repro.core.locking import parse_hierarchy
+from repro.obs.metrics import NAME_RE as _METRIC_NAME_RE
 
 _FACTORIES = {"make_lock", "make_rlock", "make_condition"}
 _PRIMITIVES = {"Lock", "RLock", "Condition"}
 _IO_CALLS = {"pwrite", "pwritev", "pread", "preadv", "fsync"}
+#: call names whose first string-literal argument is a metric/span name
+_METRIC_CTORS = {"Counter", "Gauge", "Histogram", "BoundGauge",
+                 "counter", "gauge", "histogram", "bind", "bind_summary",
+                 "merged_snapshot"}
 
 
 class Finding:
@@ -250,6 +262,34 @@ def lint_file(path: Path, tree: ast.Module, hierarchy: Dict[str, dict],
                      f"{obj}.psync() not dominated by a {obj}.pwb() in "
                      f"{fn.name}() — nothing was flush-requested here")
 
+    # ---- L006: metric/span name grammar ---------------------------------
+    def _check_metric_name(node: ast.AST, name: str) -> None:
+        if not _METRIC_NAME_RE.match(name):
+            flag(node, "L006",
+                 f"metric/span name {name!r} violates the documented "
+                 f"subsystem.noun_unit grammar (src/repro/obs/README.md)")
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            fname = _factory_name(node)
+            if fname in _METRIC_CTORS:
+                lit = _literal_class_arg(node)
+                if lit is not None:
+                    _check_metric_name(node, lit)
+            elif fname == "bind_group" and node.args and \
+                    isinstance(node.args[0], ast.Dict):
+                for k in node.args[0].keys:
+                    if isinstance(k, ast.Constant) and \
+                            isinstance(k.value, str):
+                        _check_metric_name(k, k.value)
+        elif isinstance(node, ast.Assign) and \
+                isinstance(node.value, ast.Dict) and \
+                any(isinstance(t, ast.Name) and t.id == "_LEVELS"
+                    for t in node.targets):
+            for k in node.value.keys:
+                if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                    _check_metric_name(k, k.value)
+
     # ---- L004/L005: the guarded-by contract -----------------------------
     for cls_node in ast.walk(tree):
         if not isinstance(cls_node, ast.ClassDef):
@@ -349,8 +389,9 @@ def run(paths: List[Path]) -> List[Finding]:
 
 def main(argv: List[str]) -> int:
     import repro.core as core
-    default = Path(core.__file__).parent
-    paths = [Path(a) for a in argv] or [default]
+    import repro.obs as obs
+    defaults = [Path(core.__file__).parent, Path(obs.__file__).parent]
+    paths = [Path(a) for a in argv] or defaults
     findings = run(paths)
     for f in findings:
         print(f)

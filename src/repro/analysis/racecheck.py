@@ -448,6 +448,17 @@ def instrument(cls: type) -> bool:
             specs[fname] = sp
     if not specs:
         return False
+    for base in cls.__mro__[1:]:
+        if base in _instrumented:
+            # the inherited (instrumented) methods already intercept the
+            # ancestor's declared fields — wrapping them again here would
+            # double-report every access; only newly-declared names need
+            # a subclass wrapper
+            inherited = locking.guards(base)
+            specs = {f: s for f, s in specs.items() if f not in inherited}
+            break
+    if not specs:
+        return True                    # fully covered by an ancestor's wrap
     names = frozenset(specs)
     orig_get = cls.__getattribute__
     orig_set = cls.__setattr__
@@ -492,9 +503,11 @@ def deinstrument(cls: type) -> None:
         cls.__getattribute__, cls.__setattr__, cls.__init__ = orig
 
 
-#: core modules whose GUARDED_BY-bearing classes install_core instruments
+#: core modules whose GUARDED_BY-bearing classes install_core instruments;
+#: bare names resolve under ``repro.core``, dotted names are absolute
 CORE_MODULES = ("api", "log", "cleanup", "pager", "router", "namespace",
-                "readcache", "drain")
+                "readcache", "drain",
+                "repro.obs.metrics", "repro.obs.flight")
 
 
 def install_core() -> List[type]:
@@ -502,7 +515,8 @@ def install_core() -> List[type]:
     import importlib
     done: List[type] = []
     for modname in CORE_MODULES:
-        mod = importlib.import_module(f"repro.core.{modname}")
+        mod = importlib.import_module(
+            modname if "." in modname else f"repro.core.{modname}")
         for obj in list(vars(mod).values()):
             if isinstance(obj, type) and obj.__module__ == mod.__name__ \
                     and locking.guards(obj):

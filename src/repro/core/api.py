@@ -39,6 +39,11 @@ from repro.core.policy import Policy, StreamClassifier
 from repro.core.readcache import AtomicInt, LRUCache, RadixTree
 from repro.core.router import EpochRouter
 from repro.core import recovery as _recovery
+# submodule-object imports only: pulling a NAME out of repro.obs here
+# would deadlock the repro.obs -> repro.core.locking -> repro.core ->
+# api import cycle (ObsPlane is imported lazily in NVCache.__init__)
+from repro.obs import flight as obs_flight
+from repro.obs import metrics as obs_metrics
 
 O_RDONLY, O_WRONLY, O_RDWR = os.O_RDONLY, os.O_WRONLY, os.O_RDWR
 O_CREAT, O_APPEND, O_TRUNC = os.O_CREAT, os.O_APPEND, os.O_TRUNC
@@ -185,14 +190,11 @@ class OpenFile:
 
 class NVCache:
     GUARDED_BY = {
-        # read/replay/migration counters bumped from every api thread;
-        # stats() folds them under the same lock for a coherent snapshot
-        "stats_mode_migrations": "_stats_lock",
-        "stats_dirty_misses": "_stats_lock",
-        "stats_replay_entries": "_stats_lock",
-        "stats_readahead_loads": "_stats_lock",
-        "stats_readahead_pages": "_stats_lock",
-        "stats_readahead_hits": "_stats_lock",
+        # the observability plane (registry + profiler + flight recorder):
+        # published in __init__ before any engine thread starts and never
+        # rebound; the metric objects inside synchronize themselves
+        # (per-thread cells merged under leaf:obs, flight under leaf:flight)
+        "obs": locking.VOLATILE,
     }
 
     def __init__(self, policy: Policy, tier, *, nvmm: Optional[NVMM] = None,
@@ -210,6 +212,14 @@ class NVCache:
         else:
             self.recovery_stats = None
             self.log = NVLog(self.nvmm, policy, format=True)
+
+        # observability plane (PR 10): metrics registry + span profiler +
+        # persistent flight recorder.  Built before any engine thread starts
+        # so publication is ordered by thread creation (happens-before).
+        from repro.obs import ObsPlane
+        self.obs = ObsPlane(policy, self.nvmm)
+        for _sh in self.log.shards:
+            _sh.obs = self.obs
 
         self.lru = LRUCache(policy.read_cache_pages, policy.page_size)
         # the durable namespace owns the file tables (path→File, fdid→File,
@@ -241,17 +251,129 @@ class NVCache:
                                    meta_gate=self.ns,
                                    reap=self._reap_file,
                                    pager=self.pager,
-                                   writeback=self._writeback_pressure)
+                                   writeback=self._writeback_pressure,
+                                   obs=self.obs)
+        # engine counters live in the registry; the stats_* properties
+        # below keep the historic read API
+        reg = self.obs.registry
+        self._c_mode_migrations = reg.counter("engine.mode_migration_total")
+        self._c_dirty_misses = reg.counter("read.dirty_miss_total")
+        self._c_replay_entries = reg.counter("read.replay_entry_total")
+        self._c_ra_loads = reg.counter("read.readahead_load_total")
+        self._c_ra_pages = reg.counter("read.readahead_page_total")
+        self._c_ra_hits = reg.counter("read.readahead_hit_total")
+        self._register_metrics()
         self.cleanup.start()
         self._crashed = False
-        self._stats_lock = locking.make_lock("leaf:stats")
-        # guarded-by: _stats_lock — the NVCache-level counters below
-        self.stats_mode_migrations = 0
-        self.stats_dirty_misses = 0
-        self.stats_replay_entries = 0   # refs inspected across dirty misses
-        self.stats_readahead_loads = 0  # extent loads that prefetched pages
-        self.stats_readahead_pages = 0  # pages loaded beyond the missed one
-        self.stats_readahead_hits = 0   # first demand-hits on prefetched pages
+        if self.obs.flight is not None:
+            self.obs.flight.record(obs_flight.EV_ATTACH, self.obs.level,
+                                   policy.shards, policy.flight_records)
+
+    def _register_metrics(self) -> None:
+        """Bind every legacy subsystem counter into the registry so
+        ``stats()`` (and the ``--profile`` report) read one coherent
+        snapshot.  Bound groups keep each subsystem's own locked
+        ``snapshot_stats`` as the coherence unit."""
+        reg = self.obs.registry
+        reg.bind("engine.shard_count", lambda: self.policy.shards)
+        reg.bind("log.used_count", lambda: self.log.used_entries)
+        reg.bind("log.full_scan_total", lambda: self.log.stats_full_scans)
+        reg.bind_summary(
+            "log.alloc_wait_us",
+            lambda: obs_metrics.Histogram.merged_snapshot(
+                "log.alloc_wait_us",
+                [sh.alloc_wait for sh in self.log.shards]))
+        reg.bind_group({"lru.hit_total": "hits",
+                        "lru.miss_total": "misses",
+                        "lru.eviction_total": "evictions"},
+                       self.lru.snapshot_stats)
+        reg.bind_group({"nvmm.psync_total": "psync",
+                        "nvmm.pwb_total": "pwb",
+                        "nvmm.pwb_line_total": "pwb_lines",
+                        "nvmm.fence_total": "fence",
+                        "nvmm.stored_bytes": "stored"},
+                       lambda: {"psync": self.nvmm.stats_psync,
+                                "pwb": self.nvmm.stats_pwb,
+                                "pwb_lines": self.nvmm.stats_pwb_lines,
+                                "fence": self.nvmm.stats_fence,
+                                "stored": self.nvmm.stats_stored_bytes})
+        reg.bind_group({"drain.batch_total": "batches",
+                        "drain.entry_total": "entries",
+                        "drain.fsync_total": "fsyncs",
+                        "drain.fsync_issued_total": "fsyncs_issued",
+                        "drain.fsync_merged_total": "fsyncs_merged",
+                        "drain.extent_total": "extents",
+                        "drain.pwritev_total": "pwritevs",
+                        "drain.deferred_total": "deferred",
+                        "drain.span_merge_total": "span_merges"},
+                       lambda: {"batches": self.cleanup.stats_batches,
+                                "entries": self.cleanup.stats_entries,
+                                "fsyncs": self.cleanup.stats_fsyncs,
+                                "fsyncs_issued":
+                                    self.cleanup.stats_fsyncs_issued,
+                                "fsyncs_merged":
+                                    self.cleanup.stats_fsyncs_merged,
+                                "extents": self.cleanup.stats_extents,
+                                "pwritevs": self.cleanup.stats_pwritevs,
+                                "deferred": self.cleanup.stats_deferred,
+                                "span_merges":
+                                    self.cleanup.stats_span_merges})
+        reg.bind_group({"route.epoch_count": "epoch",
+                        "route.override_count": "overrides",
+                        "route.skew_ratio": "skew_ratio",
+                        "route.skipped_uneconomic_total":
+                            "skipped_uneconomic",
+                        "route.stripe_widening_total": "stripe_widenings"},
+                       lambda: (self.router.snapshot_stats()
+                                if self.router else {}))
+        reg.bind("route.migration_total",
+                 lambda: (self.cleanup.rebalancer.stats_migrations
+                          if self.cleanup.rebalancer else 0))
+        reg.bind_group({"meta.op_total": "meta_ops",
+                        "meta.entry_total": "meta_entries",
+                        "meta.deferred_apply_total": "deferred_applies"},
+                       self.ns.snapshot_stats)
+        reg.bind_group({"page.frame_used_count": "frames_used",
+                        "page.frame_write_total": "frame_writes",
+                        "page.frame_bytes": "frame_bytes",
+                        "page.cow_bytes": "cow_bytes",
+                        "page.writeback_total": "writebacks",
+                        "page.alloc_fallback_total": "alloc_fail"},
+                       lambda: (self.pager.snapshot_stats()
+                                if self.pager else {}))
+
+    # legacy read API for the registry-backed engine counters
+    @property
+    def stats_mode_migrations(self) -> int:
+        return self._c_mode_migrations.value
+
+    @property
+    def stats_dirty_misses(self) -> int:
+        return self._c_dirty_misses.value
+
+    @property
+    def stats_replay_entries(self) -> int:
+        return self._c_replay_entries.value
+
+    @property
+    def stats_readahead_loads(self) -> int:
+        return self._c_ra_loads.value
+
+    @property
+    def stats_readahead_pages(self) -> int:
+        return self._c_ra_pages.value
+
+    @property
+    def stats_readahead_hits(self) -> int:
+        return self._c_ra_hits.value
+
+    def _flight_meta(self, op: int, fdid: int, mseq: int) -> None:
+        """Record a journaled namespace op in the flight ring (rare event:
+        recorded whenever the ring exists, regardless of obs_level)."""
+        fl = self.obs.flight
+        if fl is not None:
+            fl.record(obs_flight.EV_META_OP, op,
+                      0 if fdid is None else fdid, mseq)
 
     # ------------------------------------------------------------- lifecycle
     def _resolve_fdid(self, fdid: int) -> Optional[File]:
@@ -354,6 +476,7 @@ class NVCache:
                         # directory update
                         marks, mseq = self.ns.journal_locked(MOP_CREATE, fdid, 0,
                                                       path)
+                        self._flight_meta(MOP_CREATE, fdid, mseq)
                     backend = self.tier.open(path)
                     if created:
                         self.ns.note_backend_applied(mseq)
@@ -477,6 +600,7 @@ class NVCache:
                     else:
                         marks, mseq = self.ns.journal_locked(MOP_FTRUNCATE, f.fdid,
                                                       0, f.path)
+                        self._flight_meta(MOP_FTRUNCATE, f.fdid, mseq)
                 f.skip_drain_fsync = True
                 try:
                     self._drain_barrier(f, "ftruncate")
@@ -498,6 +622,7 @@ class NVCache:
                     else:
                         marks, mseq = self.ns.journal_locked(MOP_FTRUNCATE, f.fdid,
                                                       length, f.path)
+                        self._flight_meta(MOP_FTRUNCATE, f.fdid, mseq)
             self._truncate_apply(f, length, marks, mseq if marks else 0)
         finally:
             if wal_reset:
@@ -567,12 +692,21 @@ class NVCache:
         """Drain the shards ``f`` touched and wait for its entries to land
         — the shared barrier under close/flock/O_TRUNC/route migration."""
         touched = set(f.shards_touched)
+        prof = self.obs.prof
+        fl = self.obs.flight
+        if fl is not None:
+            fl.record(obs_flight.EV_BARRIER_ENTER, f.fdid, len(touched))
+        t0 = time.perf_counter_ns() if prof.lv1 else 0
         self.cleanup.request_drain(touched)
         try:
             if not f.wait_drained(timeout=timeout):
                 raise TimeoutError(f"drain of {f.path} timed out on {label}")
         finally:
             self.cleanup.end_drain(touched)
+            if prof.lv1:
+                prof.h_barrier.record_ns(time.perf_counter_ns() - t0)
+            if fl is not None:
+                fl.record(obs_flight.EV_BARRIER_EXIT, f.fdid)
 
     def _migrate_route(self, mig) -> bool:
         """Execute one planned route migration (called by the pool's
@@ -604,8 +738,15 @@ class NVCache:
                     # barrier above makes the width change safe for the
                     # same reason a key move is (no undrained entry spans
                     # the old and new stripe maps)
-                    return self.router.install_width(mig.fdid, mig.new_shift)
-                return self.router.install(mig.key, mig.new_sid)
+                    ok = self.router.install_width(mig.fdid, mig.new_shift)
+                else:
+                    ok = self.router.install(mig.key, mig.new_sid)
+                if ok and self.obs.flight is not None:
+                    self.obs.flight.record(obs_flight.EV_ROUTE_EPOCH,
+                                           mig.fdid, mig.new_sid,
+                                           0 if mig.new_shift is None
+                                           else mig.new_shift)
+                return ok
         except TimeoutError:
             return False
         finally:
@@ -632,8 +773,10 @@ class NVCache:
                 # freed so subsequent log-mode writes re-own the pages
                 self._writeback_file_frames(f, free=True, do_fsync=True)
             f.pmode = to_paged
-            with self._stats_lock:
-                self.stats_mode_migrations += 1
+            self._c_mode_migrations.inc()
+            if self.obs.flight is not None:
+                self.obs.flight.record(obs_flight.EV_MODE_MIGRATE, f.fdid,
+                                       1 if to_paged else 0)
             return True
         except TimeoutError:
             return False
@@ -770,6 +913,8 @@ class NVCache:
         # WAL-reset freeze reuse the same gate, so it is held in every
         # configuration, not just under adaptive routing
         f.route_enter()
+        prof = self.obs.prof
+        lv1 = prof.lv1
         try:
             written = 0
             view = memoryview(data)
@@ -782,7 +927,10 @@ class NVCache:
                     sb = self._stripe_bytes_of(f)
                     lim = min(lim, sb - (off + written) % sb)
                 chunk = view[written:written + lim]
+                t0 = time.perf_counter_ns() if lv1 else 0
                 self._pwrite_op(f, bytes(chunk), off + written)
+                if lv1:
+                    prof.h_op.record_ns(time.perf_counter_ns() - t0)
                 written += len(chunk)
                 if progress is not None:
                     progress[0] = written
@@ -1005,8 +1153,7 @@ class NVCache:
                         self.lru.note_hit()        # miss load is not a hit
                         if d.prefetched:      # first demand-hit on a
                             d.prefetched = False   # readahead-loaded page
-                            with self._stats_lock:
-                                self.stats_readahead_hits += 1
+                            self._c_ra_hits.inc()
                     d.accessed = True
                     pstart = p * ps
                     s = pos - pstart
@@ -1017,7 +1164,13 @@ class NVCache:
             # miss: load the aligned extent covering p (takes its own
             # locks), then retry this page — it can in principle be evicted
             # again before the retry, in which case the loop reloads it
-            self._load_extent(f, p)
+            prof = self.obs.prof
+            if prof.lv2:
+                t0 = time.perf_counter_ns()
+                self._load_extent(f, p)
+                prof.h_read_load.record_ns(time.perf_counter_ns() - t0)
+            else:
+                self._load_extent(f, p)
             just_loaded = p
         return bytes(out)
 
@@ -1084,9 +1237,8 @@ class NVCache:
             held = need
             self.lru.note_miss()
             if len(need) > 1:
-                with self._stats_lock:
-                    self.stats_readahead_loads += 1
-                    self.stats_readahead_pages += len(need) - 1
+                self._c_ra_loads.inc()
+                self._c_ra_pages.inc(len(need) - 1)
             bufs = self.lru.acquire_buffers(len(need))
             for d in need:                    # ascending, after atomic locks
                 d.cleanup_lock.acquire()
@@ -1158,15 +1310,18 @@ class NVCache:
             return
         ps = self.policy.page_size
         base = d.page_no * ps
-        with self._stats_lock:
-            self.stats_dirty_misses += 1
-            self.stats_replay_entries += len(refs)
+        self._c_dirty_misses.inc()
+        self._c_replay_entries.inc(len(refs))
+        prof = self.obs.prof
+        t0 = time.perf_counter_ns() if prof.lv2 else 0
         for ref in refs:
             edata = self.log.ref_payload(ref)
             s = max(ref.off, base)
             t = min(ref.off + ref.length, base + ps)
             if s < t:
                 content.data[s - base:t - base] = edata[s - ref.off:t - ref.off]
+        if prof.lv2:
+            prof.h_read_replay.record_ns(time.perf_counter_ns() - t0)
 
     def read(self, fd: int, n: int) -> bytes:
         of = self._of(fd)
@@ -1219,6 +1374,9 @@ class NVCache:
             marks, mseq = self.ns.journal_locked(
                 MOP_UNLINK, f.fdid if f is not None else META_NO_FDID,
                 0, path)
+            self._flight_meta(MOP_UNLINK,
+                              f.fdid if f is not None else META_NO_FDID,
+                              mseq)
             try:
                 if f is not None:
                     f.unlinked = True
@@ -1268,6 +1426,9 @@ class NVCache:
                         MOP_RENAME,
                         fo.fdid if fo is not None else META_NO_FDID, 0,
                         old, new)
+                    self._flight_meta(
+                        MOP_RENAME,
+                        fo.fdid if fo is not None else META_NO_FDID, mseq)
                     if fo is not None:
                         self._maybe_retire_locked(fo)
                     if fn is not None:
@@ -1345,70 +1506,79 @@ class NVCache:
             return f.size
 
     # ------------------------------------------------------------- stats
-    def stats(self) -> dict:
-        """Aggregate counters, each group read as a locked snapshot.
+    def metrics(self) -> dict:
+        """The registry snapshot under canonical ``subsystem.noun_unit``
+        names — counters, bound legacy stats and latency-histogram
+        summaries in one dict (see ``src/repro/obs/README.md``)."""
+        return self.obs.registry.snapshot()
 
-        The drain, pager-writeback and rebalance threads mutate most of
-        these concurrently; every multi-writer counter is copied under its
-        owning lock (the per-subsystem ``snapshot_stats`` helpers and this
-        instance's ``_stats_lock``) so the dict never exposes a torn or
-        mid-update view.  Single-writer thread counters (the cleanup pool
-        properties) are folded at read per their volatile contract."""
-        lru = self.lru.snapshot_stats()
-        pager = self.pager.snapshot_stats() if self.pager else {}
-        route = self.router.snapshot_stats() if self.router else {}
-        meta = self.ns.snapshot_stats()
-        with self._stats_lock:
-            dirty_misses = self.stats_dirty_misses
-            replay_entries = self.stats_replay_entries
-            ra_loads = self.stats_readahead_loads
-            ra_pages = self.stats_readahead_pages
-            ra_hits = self.stats_readahead_hits
-            mode_migrations = self.stats_mode_migrations
+    def profile_report(self) -> str:
+        """Human-readable per-stage latency table (``--profile``).
+        Empty-ish at ``obs_level=0`` — spans are not recorded."""
+        return self.obs.prof.report()
+
+    def stats(self) -> dict:
+        """Aggregate counters under the historic flat key names.
+
+        One registry snapshot backs the whole dict: each subsystem's
+        legacy counters are bound into the registry as a group whose
+        callback still reads under that subsystem's own lock
+        (``snapshot_stats``), so no key exposes a torn or mid-update
+        view.  New callers should prefer :meth:`metrics`, which returns
+        the same snapshot under canonical names."""
+        m = self.obs.registry.snapshot()
+        aw = m["log.alloc_wait_us"]
+        ra_pages = m["read.readahead_page_total"]
+        ra_hits = m["read.readahead_hit_total"]
         return {
-            "shards": self.policy.shards,
-            "log_used": self.log.used_entries,
-            "dirty_misses": dirty_misses,
-            "replay_entries": replay_entries,
-            "log_full_scans": self.log.stats_full_scans,
-            "lru_hits": lru["hits"],
-            "lru_misses": lru["misses"],
-            "lru_evictions": lru["evictions"],
-            "readahead_loads": ra_loads,
+            "shards": m["engine.shard_count"],
+            "log_used": m["log.used_count"],
+            "dirty_misses": m["read.dirty_miss_total"],
+            "replay_entries": m["read.replay_entry_total"],
+            "log_full_scans": m["log.full_scan_total"],
+            "lru_hits": m["lru.hit_total"],
+            "lru_misses": m["lru.miss_total"],
+            "lru_evictions": m["lru.eviction_total"],
+            "readahead_loads": m["read.readahead_load_total"],
             "readahead_pages": ra_pages,
             "readahead_hits": ra_hits,
             "readahead_hit_rate": ra_hits / max(1, ra_pages),
-            "cleanup_batches": self.cleanup.stats_batches,
-            "cleanup_entries": self.cleanup.stats_entries,
-            "cleanup_fsyncs": self.cleanup.stats_fsyncs,
-            "cleanup_fsyncs_issued": self.cleanup.stats_fsyncs_issued,
-            "cleanup_fsyncs_merged": self.cleanup.stats_fsyncs_merged,
-            "drain_extents": self.cleanup.stats_extents,
-            "drain_pwritevs": self.cleanup.stats_pwritevs,
-            "drain_deferred": self.cleanup.stats_deferred,
-            "drain_span_merges": self.cleanup.stats_span_merges,
-            "nvmm_psyncs": self.nvmm.stats_psync,
-            "nvmm_pwbs": self.nvmm.stats_pwb,
-            "nvmm_pwb_lines": self.nvmm.stats_pwb_lines,
-            "nvmm_fences": self.nvmm.stats_fence,
-            "nvmm_stored_bytes": self.nvmm.stats_stored_bytes,
-            "alloc_wait_s": sum(sh.load_sample()["alloc_wait_s"]
-                                for sh in self.log.shards),
-            "route_epoch": route.get("epoch", 0),
-            "route_overrides": route.get("overrides", 0),
-            "route_migrations": (self.cleanup.rebalancer.stats_migrations
-                                 if self.cleanup.rebalancer else 0),
-            "route_skew_ratio": route.get("skew_ratio", 0.0),
-            "route_skipped_uneconomic": route.get("skipped_uneconomic", 0),
-            "route_stripe_widenings": route.get("stripe_widenings", 0),
-            "meta_ops": meta["meta_ops"],
-            "meta_entries": meta["meta_entries"],
-            "meta_deferred_applies": meta["deferred_applies"],
-            "mode_migrations": mode_migrations,
-            "paged_frames_used": pager.get("frames_used", 0),
-            "paged_frame_writes": pager.get("frame_writes", 0),
-            "paged_frame_bytes": pager.get("frame_bytes", 0),
-            "paged_cow_bytes": pager.get("cow_bytes", 0),
-            "paged_writebacks": pager.get("writebacks", 0),
-            "paged_alloc_fallbacks": pager.get("alloc_fail", 0),
+            "cleanup_batches": m["drain.batch_total"],
+            "cleanup_entries": m["drain.entry_total"],
+            "cleanup_fsyncs": m["drain.fsync_total"],
+            "cleanup_fsyncs_issued": m["drain.fsync_issued_total"],
+            "cleanup_fsyncs_merged": m["drain.fsync_merged_total"],
+            "drain_extents": m["drain.extent_total"],
+            "drain_pwritevs": m["drain.pwritev_total"],
+            "drain_deferred": m["drain.deferred_total"],
+            "drain_span_merges": m["drain.span_merge_total"],
+            "nvmm_psyncs": m["nvmm.psync_total"],
+            "nvmm_pwbs": m["nvmm.pwb_total"],
+            "nvmm_pwb_lines": m["nvmm.pwb_line_total"],
+            "nvmm_fences": m["nvmm.fence_total"],
+            "nvmm_stored_bytes": m["nvmm.stored_bytes"],
+            # alloc-wait is a real distribution now (PR 10): the flat
+            # seconds sum stays for old readers, count/mean/p95 added so
+            # a zero-count window can't masquerade as a measured average
+            "alloc_wait_s": aw["sum_us"] * 1e-6,
+            "alloc_waits": aw["count"],
+            "alloc_wait_mean_us": aw["mean_us"],
+            "alloc_wait_p95_us": aw["p95_us"],
+            "route_epoch": m["route.epoch_count"],
+            "route_overrides": m["route.override_count"],
+            "route_migrations": m["route.migration_total"],
+            "route_skew_ratio": m["route.skew_ratio"],
+            "route_skipped_uneconomic":
+                m["route.skipped_uneconomic_total"],
+            "route_stripe_widenings": m["route.stripe_widening_total"],
+            "meta_ops": m["meta.op_total"],
+            "meta_entries": m["meta.entry_total"],
+            "meta_deferred_applies": m["meta.deferred_apply_total"],
+            "mode_migrations": m["engine.mode_migration_total"],
+            "paged_frames_used": m["page.frame_used_count"],
+            "paged_frame_writes": m["page.frame_write_total"],
+            "paged_frame_bytes": m["page.frame_bytes"],
+            "paged_cow_bytes": m["page.cow_bytes"],
+            "paged_writebacks": m["page.writeback_total"],
+            "paged_alloc_fallbacks": m["page.alloc_fallback_total"],
         }

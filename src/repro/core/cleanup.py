@@ -55,6 +55,7 @@ from repro.core import drain as _drain
 from repro.core import locking
 from repro.core.drain import FsyncEpochScheduler
 from repro.core.log import CG_HEAD, META_FDID, LogShard, NVLog
+from repro.obs import flight as _obs_flight
 
 
 class CleanupThread(threading.Thread):
@@ -75,16 +76,21 @@ class CleanupThread(threading.Thread):
         "stats_pwritevs": locking.VOLATILE,
         "stats_deferred": locking.VOLATILE,
         "stats_span_merges": locking.VOLATILE,
+        # observability plane handle: set once before start() (publication
+        # ordered by thread creation), internally synchronized
+        "obs": locking.VOLATILE,
     }
 
     def __init__(self, log: NVLog, shard: LogShard,
                  resolve_file: Callable[[int], Optional[object]],
                  *, fsync_scheduler: Optional[FsyncEpochScheduler] = None,
                  meta_gate=None, reap: Optional[Callable] = None,
-                 name: Optional[str] = None):
+                 name: Optional[str] = None, obs=None):
         super().__init__(name=name or f"nvcache-drain-{shard.sid}", daemon=True)
         self.log = log
         self.shard = shard
+        self.obs = obs                        # guarded-by: volatile (set
+        #   before start(); see GUARDED_BY)
         self.resolve_file = resolve_file      # fdid -> File (api.File) or None
         self.fsync_scheduler = fsync_scheduler
         self.meta_gate = meta_gate            # namespace (or None): blocks
@@ -120,6 +126,8 @@ class CleanupThread(threading.Thread):
         self.stats_span_merges = 0            # batches that merged a carry
 
     def run(self) -> None:
+        obs = self.obs
+        lv2 = obs is not None and obs.prof.lv2
         try:
             while not self.hard_stop.is_set():
                 min_needed = 1 if self.drain_event.is_set() else self.log.policy.batch_min
@@ -127,11 +135,15 @@ class CleanupThread(threading.Thread):
                 if self._span_deferred:
                     deadline_at = (self._span_since +
                                    self.log.policy.coalesce_deadline_ms / 1e3)
+                t0 = time.perf_counter_ns() if lv2 else 0
                 run = self.shard.wait_committed(min_needed,
                                                drain_event=self.drain_event,
                                                stop_event=self.stop_event,
                                                deferred=self._span_deferred,
                                                deadline_at=deadline_at)
+                if lv2:
+                    obs.prof.h_drain_wait.record_ns(
+                        time.perf_counter_ns() - t0)
                 if run == 0:
                     if self.stop_event.is_set() or self.hard_stop.is_set():
                         return
@@ -189,17 +201,26 @@ class CleanupThread(threading.Thread):
         if eff == 0:                          # whole batch stays open
             self._note_deferred(start, run)
             return
+        obs = self.obs
+        lv2 = obs is not None and obs.prof.lv2
         # phase 1: group by (file, page), materialize images, coalesce extents
+        t0 = time.perf_counter_ns() if lv2 else 0
         plan = _drain.build_plan(shard, start, eff, self.resolve_file, pol,
                                  abort=self._abort)
+        if lv2:
+            obs.prof.h_drain_plan.record_ns(time.perf_counter_ns() - t0)
         if plan is None:
             return
         # phase 2: extent writes under page cleanup locks + index retire
+        t0 = time.perf_counter_ns() if lv2 else 0
         drained = _drain.apply_plan(plan, pol, abort=self._abort, stats=self)
+        if lv2:
+            obs.prof.h_drain_apply.record_ns(time.perf_counter_ns() - t0)
         if drained is None:
             return
         if self._abort(_drain.FSYNC):
             return
+        t0 = time.perf_counter_ns() if lv2 else 0
         for f in drained:
             if getattr(f, "unlinked", False):
                 continue    # anonymous (unlinked-while-open) file: its
@@ -218,9 +239,13 @@ class CleanupThread(threading.Thread):
                 self.fsync_scheduler.fsync(f.backend)
             else:
                 f.backend.fsync()
+        if lv2:
+            obs.prof.h_drain_fsync.record_ns(time.perf_counter_ns() - t0)
         if self._abort(_drain.CONSUME):
             return
         shard.consume(start, eff)             # durably retire the batch
+        if obs is not None and obs.flight is not None:
+            obs.flight.record(_obs_flight.EV_BATCH, shard.sid, start, eff)
         if self.meta_gate is not None and plan.meta_entries:
             self.meta_gate.note_consumed(shard.sid, start, eff)
         if carried and (run > carried or self._span_carry_batches > 1):
@@ -442,13 +467,15 @@ class CleanupPool:
                  resolve_file: Callable[[int], Optional[object]],
                  *, router=None, migrate: Optional[Callable] = None,
                  meta_gate=None, reap: Optional[Callable] = None,
-                 pager=None, writeback: Optional[Callable] = None):
+                 pager=None, writeback: Optional[Callable] = None,
+                 obs=None):
         self.log = log
         self.fsync_scheduler = FsyncEpochScheduler(
             enabled=log.policy.fsync_epoch)
         self.threads = [CleanupThread(log, sh, resolve_file,
                                       fsync_scheduler=self.fsync_scheduler,
-                                      meta_gate=meta_gate, reap=reap)
+                                      meta_gate=meta_gate, reap=reap,
+                                      obs=obs)
                         for sh in log.shards]
         self.rebalancer: Optional[RebalanceThread] = None
         if router is not None and migrate is not None:

@@ -37,6 +37,7 @@ callers that arrive while an fsync is in flight share the single next one.
 from __future__ import annotations
 
 import threading
+import time
 from typing import Callable, Dict, List, Optional
 
 from repro.core import locking
@@ -355,6 +356,8 @@ VEC_CHUNK = 64
 
 def _apply_vectored(plan, fp, pwritev, abort, stats) -> bool:
     """A file's extents in chunks: one lock hold + one pwritev per chunk."""
+    obs = getattr(stats, "obs", None)
+    lv2 = obs is not None and obs.prof.lv2
     for i in range(0, len(fp.extents), VEC_CHUNK):
         chunk = fp.extents[i:i + VEC_CHUNK]
         if abort is not None and abort(APPLY_EXTENT):
@@ -363,7 +366,11 @@ def _apply_vectored(plan, fp, pwritev, abort, stats) -> bool:
         descs = _lock_descs(fp.file, pages)
         dmap = dict(descs)
         try:
+            t0 = time.perf_counter_ns() if lv2 else 0
             pwritev([(ext.data, ext.off) for ext in chunk])
+            if lv2:
+                obs.prof.h_drain_pwritev.record_ns(
+                    time.perf_counter_ns() - t0)
             if stats is not None:
                 stats.stats_pwritevs += 1
                 stats.stats_extents += len(chunk)
@@ -382,12 +389,18 @@ def _apply_vectored(plan, fp, pwritev, abort, stats) -> bool:
 
 def _apply_serial(plan, fp, abort, stats) -> bool:
     """Per-extent pwrite + retire (legacy mode, or backend without pwritev)."""
+    obs = getattr(stats, "obs", None)
+    lv2 = obs is not None and obs.prof.lv2
     for ext in fp.extents:
         if abort is not None and abort(APPLY_EXTENT):
             return False
         descs = _lock_descs(fp.file, ext.pages)
         try:
+            t0 = time.perf_counter_ns() if lv2 else 0
             fp.file.backend.pwrite(bytes(ext.data), ext.off)
+            if lv2:
+                obs.prof.h_drain_pwritev.record_ns(
+                    time.perf_counter_ns() - t0)
             if stats is not None:
                 stats.stats_extents += 1
             if abort is not None and abort(APPLY_RETIRE):

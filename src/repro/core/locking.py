@@ -34,8 +34,11 @@ LOCK HIERARCHY (parsed by repro.analysis.lint — keep the column format):
     90     leaf:fsync_sched      FsyncEpochScheduler._lock
     90     leaf:fsync_epoch      drain._SyncState.cond
     90     leaf:atomic_int       AtomicInt._lock
-    90     leaf:stats            NVCache._stats_lock — engine-wide stats
-                                 counters and the stats() snapshot
+    90     leaf:obs              obs.metrics cell-list/registry locks
+                                 (cold paths only: first touch per
+                                 thread, snapshot on read)
+    90     leaf:flight           obs.flight.FlightRecorder._lock — flight
+                                 ring slot allocation
 
 Rules (checked by repro.analysis.lockcheck at runtime):
 

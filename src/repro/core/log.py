@@ -76,13 +76,17 @@ from typing import Iterator, List, Optional
 from repro.core import locking
 from repro.core.nvmm import NVMM
 from repro.core.policy import Policy, SUPERBLOCK
+from repro.obs import flight as obs_flight
+from repro.obs import metrics
 
 MAGIC = 0x4E56_4341_4348_4532  # "NVCACHE2" (v1 was the unsharded layout)
-VERSION = 4                    # v3 added the persisted route table region;
-#                                v4 added the paged region (dual persistence)
+VERSION = 5                    # v3 added the persisted route table region;
+#                                v4 added the paged region (dual persistence);
+#                                v5 added the flight-recorder ring (repro.obs)
 
-_SB = struct.Struct("<QIIIIIII")  # magic, ver, entry_size, entries/shard,
-#                                   shards, fd_max, path_max, page_frames
+_SB = struct.Struct("<QIIIIIIII")  # magic, ver, entry_size, entries/shard,
+#                                    shards, fd_max, path_max, page_frames,
+#                                    flight_records
 _HDR = struct.Struct("<QQQIIII")  # cg, seq, off, fdid, length, nfollow, crc
 HDR_SIZE = 48                     # header struct (44B) padded to 48
 assert _HDR.size <= HDR_SIZE
@@ -198,7 +202,13 @@ class LogShard:
         "head": ("_lock", "_space", "_committed"),
         "volatile_tail": ("_lock", "_space", "_committed"),
         "stats_appended": ("_lock", "_space", "_committed"),
-        "stats_alloc_wait_s": ("_lock", "_space", "_committed"),
+        # internally synchronized / publish-before-threads (see __init__)
+        "alloc_wait": locking.VOLATILE,
+        "obs": locking.VOLATILE,
+        # benign race: the EV_COMMIT sampling phase counter.  Concurrent
+        # appenders may lose an increment, which only shifts which commit
+        # the 1-in-16 sample lands on — never correctness, never a seq.
+        "_commit_tick": locking.VOLATILE,
     }
 
     def __init__(self, nvmm: NVMM, policy: Policy, sid: int):
@@ -220,7 +230,17 @@ class LogShard:
         self.head = 0                           # volatile head (paper §II-B fn1)
         self.volatile_tail = 0
         self.stats_appended = 0                 # entries ever reserved here
-        self.stats_alloc_wait_s = 0.0           # time writers spent log-full
+        # guarded-by: VOLATILE — the histogram is internally synchronized
+        # (per-thread cells, repro.obs.metrics); one episode per log-full
+        # wait, so the rebalance planner reads a real distribution instead
+        # of a count-less duration sum.
+        self.alloc_wait = metrics.Histogram("log.alloc_wait_us")
+        # guarded-by: VOLATILE — the engine's ObsPlane, wired once by
+        # NVCache before any writer or drain thread starts and read-only
+        # after (publication rides the thread-start edge).  None when the
+        # shard is used standalone (recovery, unit tests).
+        self.obs = None
+        self._commit_tick = 0                   # EV_COMMIT sampling phase
 
     def format(self) -> None:
         """Zero every entry header (cg == CG_FREE) and this shard's tail."""
@@ -296,21 +316,37 @@ class LogShard:
         if k > self.n - 1:
             raise ValueError("write exceeds shard capacity; split upstream")
         deadline = None if timeout is None else time.monotonic() + timeout
-        with self._space:
-            while self.head + k - self.volatile_tail > self.n:
-                remaining = None
-                if deadline is not None:
-                    remaining = deadline - time.monotonic()
-                    if remaining <= 0:
-                        raise LogFullTimeout(f"shard {self.sid} full")
-                t0 = time.monotonic()
-                self._space.wait(timeout=remaining)
-                self.stats_alloc_wait_s += time.monotonic() - t0
-            idx = self.head
-            self.head += k
-            self.stats_appended += k
-            seq = seq_source() if seq_source is not None else 0
-            return idx, seq
+        waited_ns = 0
+        try:
+            with self._space:
+                while self.head + k - self.volatile_tail > self.n:
+                    remaining = None
+                    if deadline is not None:
+                        remaining = deadline - time.monotonic()
+                        if remaining <= 0:
+                            raise LogFullTimeout(f"shard {self.sid} full")
+                    t0 = time.monotonic_ns()
+                    self._space.wait(timeout=remaining)
+                    waited_ns += time.monotonic_ns() - t0
+                idx = self.head
+                self.head += k
+                self.stats_appended += k
+                seq = seq_source() if seq_source is not None else 0
+                return idx, seq
+        finally:
+            if waited_ns:
+                # one episode per log-full wait (including timed-out ones)
+                self.alloc_wait.record_ns(waited_ns)
+                obs = self.obs
+                if obs is not None and obs.flight is not None:
+                    obs.flight.record(obs_flight.EV_BACKPRESSURE,
+                                      self.sid, waited_ns)
+
+    @property
+    def stats_alloc_wait_s(self) -> float:
+        """Total time writers spent log-full (back-compat view over the
+        ``log.alloc_wait_us`` histogram)."""
+        return self.alloc_wait.sum_s
 
     def try_alloc(self, k: int, seq_source=None) -> Optional[tuple[int, int]]:
         with self._space:
@@ -355,6 +391,9 @@ class LogShard:
         head, seq = self.alloc(k, timeout=timeout, seq_source=seq_source)
         if on_alloc is not None:
             on_alloc(head, k, seq)
+        obs = self.obs
+        lv2 = obs is not None and obs.prof.lv2
+        t_fill = time.perf_counter_ns() if lv2 else 0
         # followers first (paper §II-D: they must be durable before the head
         # commit makes the whole group visible to recovery)
         for j in range(1, k):
@@ -367,11 +406,28 @@ class LogShard:
         self.nvmm.store(eoff + 32, struct.pack("<I", k - 1))
         self.nvmm.pwb(eoff, HDR_SIZE)
         self.nvmm.pfence()                    # entries durable before commit
+        t_commit = time.perf_counter_ns() if lv2 else 0
+        if lv2:
+            obs.prof.h_fill.record_ns(t_commit - t_fill)
         self.nvmm.store_u64(eoff, CG_HEAD)    # commit the group
         self.nvmm.pwb(eoff, 8)
         self.nvmm.psync()                     # durable linearizability (§III)
         with self._lock:
             self._committed.notify_all()
+        if lv2:
+            obs.prof.h_commit.record_ns(time.perf_counter_ns() - t_commit)
+        if obs is not None and obs.prof.lv1 and obs.flight is not None:
+            # Sampled 1-in-16 per shard: commits are the only high-rate
+            # flight event, and a per-group record would both dominate the
+            # instrumented hot-path cost (~5µs pack+crc+store each) and
+            # wrap the small ring in milliseconds.  Sampling keeps a
+            # commit heartbeat in the forensic window (seq payloads show
+            # the gaps) at 1/16th the cost; rare events stay unsampled.
+            tick = self._commit_tick
+            self._commit_tick = tick + 1
+            if tick & 0xF == 0:
+                obs.flight.record(obs_flight.EV_COMMIT, self.sid, seq,
+                                  head % self.n, k)
         return head, k, seq
 
     # -------------------------------------------------- consumption (drain)
@@ -485,11 +541,17 @@ class LogShard:
         the cumulative counters the sampler turns into per-epoch deltas."""
         with self._lock:
             head, vtail = self.head, self.volatile_tail
-            wait_s = self.stats_alloc_wait_s
             appended = self.stats_appended
+        # the alloc-wait histogram is internally synchronized: a real
+        # distribution (count + sum), not a count-less duration sum
+        waits = self.alloc_wait.count
+        wait_ns = self.alloc_wait.sum_ns
         return {"sid": self.sid, "used": head - vtail,
                 "queue": head - self.persistent_tail,
-                "alloc_wait_s": wait_s, "appended": appended}
+                "alloc_wait_s": wait_ns * 1e-9, "appended": appended,
+                "alloc_waits": waits,
+                "alloc_wait_mean_us": (wait_ns / waits) * 1e-3
+                                      if waits else 0.0}
 
     def notify_committed(self) -> None:
         with self._committed:
@@ -562,13 +624,15 @@ class NVLog:
 
     # ------------------------------------------------------------ superblock
     def _format(self) -> None:
-        # zeroes everything below the shards — fd table, route table, and
-        # (VERSION 4) every paged-frame header, so a reformat frees frames
+        # zeroes everything below the shards — fd table, route table,
+        # (VERSION 5) the flight-recorder ring, and (VERSION 4) every
+        # paged-frame header, so a reformat frees frames
         self.nvmm.store(0, b"\x00" * self.policy.entries_base)
         self.nvmm.store(0, _SB.pack(MAGIC, VERSION, self.entry_size, self.n,
                                     self.policy.shards, self.policy.fd_max,
                                     self.policy.path_max,
-                                    self.policy.page_frames))
+                                    self.policy.page_frames,
+                                    self.policy.flight_records))
         self.nvmm.pwb(0, self.policy.entries_base)
         for sh in self.shards:
             sh.format()
@@ -577,7 +641,7 @@ class NVLog:
         self._seq = 0                          # lint: allow(L004)
 
     def _check_superblock(self) -> None:
-        magic, ver, esz, n, k, fdm, pm, pf = _SB.unpack_from(
+        magic, ver, esz, n, k, fdm, pm, pf, fr = _SB.unpack_from(
             self.nvmm.load(0, _SB.size))
         if magic != MAGIC or ver != VERSION:
             raise ValueError("not an NVCache log region")
@@ -585,6 +649,8 @@ class NVLog:
             raise ValueError("policy mismatch with on-NVMM superblock")
         if pf != self.policy.page_frames:
             raise ValueError("paged-region mismatch with on-NVMM superblock")
+        if fr != self.policy.flight_records:
+            raise ValueError("flight-ring mismatch with on-NVMM superblock")
 
     # ------------------------------------------------------------- fd table
     def fd_table_set(self, fdid: int, path: str) -> None:

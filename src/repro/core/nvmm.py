@@ -29,7 +29,7 @@ Crash model (standard persistent-memory testing model, e.g. Yat):
 ``track=False`` disables the shadow entirely (used by benchmarks where only
 the volatile view matters for throughput).
 
-Region map (layout VERSION 4, offsets computed by
+Region map (layout VERSION 5, offsets computed by
 :class:`repro.core.policy.Policy`)::
 
     0             superblock (magic/version/geometry) + per-shard
@@ -37,10 +37,18 @@ Region map (layout VERSION 4, offsets computed by
     SUPERBLOCK    fd-path table (fd_max slots of path_max bytes)
     route_base    persisted route record (epoch + overrides + stripe-width
                   tuning entries, CRC'd header)
+    flight_base   flight-recorder ring (VERSION 5): flight_records 64-byte
+                  CRC'd event records, round-robin, store+pwb only (no
+                  fence — lines ride the engine's next psync) — see
+                  :mod:`repro.obs.flight`
     page_base     paged region (VERSION 4): page_frames in-place frames,
                   each [header cacheline | 2 ping-pong page slots] — see
                   :mod:`repro.core.pager`
     entries_base  K shard logs of entries_per_shard fixed-size entries
+
+VERSION 4 is the same map minus the ``flight_base`` row (and with an
+8-field superblock): a VERSION-4 image with ``flight_records=0`` decodes
+identically under VERSION 5 offsets.
 
 Two persistence modes share the region: log shards (append + drain) and
 paged frames (in-place overwrite + writeback).  They are seq-fenced

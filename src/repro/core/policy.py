@@ -140,8 +140,20 @@ class Policy:
     stripe_tune_streak: int = 3
     stripe_tune_max_shift: int = 4      # stripe never narrows below
     #                                     stripe_bytes >> max_shift (>= page)
+    # observability plane (VERSION 5, repro.obs): span-profiler level —
+    # 0 == off (a branch per op), 1 == op-level spans + flight commit
+    # events, 2 == full per-stage write/read/drain breakdown.
+    obs_level: int = 0
+    # flight-recorder ring: fixed 64-byte event records carved between the
+    # route table and the paged region.  0 == no ring (layout matches
+    # VERSION 4 modulo the superblock version/field).
+    flight_records: int = 256
 
     def __post_init__(self):
+        if self.obs_level not in (0, 1, 2):
+            raise ValueError("obs_level must be 0, 1 or 2")
+        if self.flight_records < 0:
+            raise ValueError("flight_records must be >= 0")
         if self.page_size & (self.page_size - 1):
             raise ValueError("page_size must be a power of two (radix tree)")
         if self.entry_size <= ENTRY_HEADER:
@@ -219,10 +231,23 @@ class Policy:
         return ROUTE_HDR + self.route_table_max * ROUTE_ENT
 
     @property
-    def page_base(self) -> int:
-        """Start of the paged region (VERSION 4): page-aligned, between the
-        route table and the shard logs.  Empty when ``page_frames == 0``."""
+    def flight_base(self) -> int:
+        """Start of the flight-recorder ring (VERSION 5): cacheline-
+        aligned, between the route table and the paged region.  Empty
+        when ``flight_records == 0``."""
         base = self.route_base + self.route_table_bytes
+        return (base + CACHELINE - 1) & ~(CACHELINE - 1)
+
+    @property
+    def flight_region_bytes(self) -> int:
+        return self.flight_records * CACHELINE
+
+    @property
+    def page_base(self) -> int:
+        """Start of the paged region (VERSION 4/5): page-aligned, between
+        the flight ring and the shard logs.  Empty when
+        ``page_frames == 0``."""
+        base = self.flight_base + self.flight_region_bytes
         return (base + self.page_size - 1) & ~(self.page_size - 1)
 
     @property

@@ -73,6 +73,12 @@ class RecoveryStats:
     frames_seen: int = 0         # mapped paged-region frames found (v4)
     frames_replayed: int = 0     # frames whose image reached the backend
     frames_dropped: int = 0      # frames failing CRC (dropped whole)
+    # forensic timeline (v5): the flight-recorder events that survived the
+    # crash, ordered by event seq (repro.obs.flight.FlightEvent), plus the
+    # count of torn records the decoder dropped.  Decoded before replay —
+    # the closing reformat wipes the ring.
+    flight_events: List = dataclasses.field(default_factory=list)
+    flight_torn_dropped: int = 0
 
 
 def recover(nvmm: NVMM, policy: Policy,
@@ -95,6 +101,15 @@ def recover(nvmm: NVMM, policy: Policy,
     log = NVLog(nvmm, policy, format=False, adopt=False)
     stats = RecoveryStats(shards=policy.shards)
     stats.route_epoch, _, _ = load_route_record(nvmm, policy)
+
+    # phase 0 (layout v5): decode the flight-recorder ring FIRST — the
+    # closing reformat zeroes everything below entries_base, ring
+    # included.  The surviving timeline is pure forensics (never consulted
+    # by the replay): what the engine was doing when the power died.
+    if policy.flight_records:
+        from repro.obs.flight import decode_ring
+        stats.flight_events, stats.flight_torn_dropped = \
+            decode_ring(nvmm, policy)
 
     # phase 1: scan each shard independently, collecting committed groups
     # (head entry + its committed followers) in shard-log order.

@@ -112,8 +112,9 @@ def test_traced_condition_notify_while_held():
     probe (``acquire(False)``) succeeded reentrantly on RLock-backed
     wrappers and ``notify`` raised "cannot notify on un-acquired lock"."""
     tr = LockTracer()
-    locking.set_tracer(tr)
-    try:
+    prev = locking._tracer              # --sanitize arms a session tracer:
+    locking.set_tracer(tr)              # restore IT, not None, or every
+    try:                                # later test loses its lock edges
         cv = locking.make_condition("leaf:fsync_epoch")
         with cv:
             cv.notify_all()             # raised before the fix
@@ -127,13 +128,18 @@ def test_traced_condition_notify_while_held():
             shared._acquire_restore(state)
             assert shared._is_owned()
     finally:
-        locking.set_tracer(None)
+        locking.set_tracer(prev)
     assert tr.violations == []
 
 
 def test_untraced_factories_return_plain_locks():
-    lock = locking.make_lock("shard")
-    assert type(lock).__module__ == "_thread"   # zero overhead when off
+    prev = locking._tracer
+    locking.set_tracer(None)
+    try:
+        lock = locking.make_lock("shard")
+        assert type(lock).__module__ == "_thread"   # zero overhead when off
+    finally:
+        locking.set_tracer(prev)
 
 
 # ------------------------------------------------------------------ the lint
